@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: timing, hardware model, synthetic frames."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.data.pointcloud import SceneConfig, frame_pair
+
+# Reduced-but-representative scene for CPU benchmarking (full 130k-point
+# frames take minutes per ICP run on this 1-core container; structure and
+# per-point candidate count scale linearly and are reported separately).
+BENCH_SCENE = SceneConfig(n_ground=18_000, n_walls=13_500, n_poles=3_600,
+                          n_clutter=3_900, extent=50.0, sensor_range=50.0)
+
+# Power/constants for the modeled (projected) columns — labeled as such.
+POWER = {
+    "xeon_6246r_paper_w": 16.3,   # paper §IV-D: measured CPU power
+    "fpps_total_w": 28.0,         # paper §IV-D: FPGA 14+14 + 2.3 host
+    "tpu_v5e_chip_w": 200.0,      # public v5e board-power estimates
+}
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall time (s) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def bench_frames(n_seqs: int = 10, frame: int = 5, samples: int = 4096):
+    """One frame-pair per synthetic sequence (stand-ins for KITTI 00-09)."""
+    out = []
+    for seq in range(n_seqs):
+        out.append(frame_pair(seq, frame, BENCH_SCENE, samples))
+    return out
+
+
+def emit(rows):
+    """Print the harness CSV contract: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

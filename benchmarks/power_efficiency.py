@@ -1,0 +1,41 @@
+"""Paper §IV-D reproduction: power efficiency (frames/s/W), modeled.
+
+The paper reports 8.58x higher power efficiency for CPU+FPGA (28 W total)
+vs the Xeon baseline (16.3 W measured package power). We reproduce the
+metric structure with:
+  * CPU column: measured k-d tree ICP latency on this host x the paper's
+    16.3 W figure,
+  * TPU column: roofline-projected v5e per-frame latency x a 200 W chip
+    budget (public v5e estimates).
+Both clearly labeled as modeled — no power can be measured in this
+container.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import POWER, bench_frames, emit, timeit
+from benchmarks.registration_latency import _project_v5e_frame_s
+from repro.core.baseline import kdtree_icp
+
+
+def run(n_seqs: int = 3, samples: int = 2048, iters: int = 50):
+    rows = []
+    effs = []
+    for seq, (src, dst, _) in enumerate(bench_frames(n_seqs,
+                                                     samples=samples)):
+        t_cpu = timeit(lambda: kdtree_icp(src, dst, iters), warmup=0, iters=1)
+        t_tpu = _project_v5e_frame_s(src.shape[0], dst.shape[0], iters)
+        eff_cpu = 1.0 / (t_cpu * POWER["xeon_6246r_paper_w"])   # frames/J
+        eff_tpu = 1.0 / (t_tpu * POWER["tpu_v5e_chip_w"])
+        effs.append(eff_tpu / eff_cpu)
+        rows.append((f"power/seq{seq:02d}", 0.0,
+                     f"cpu={eff_cpu:.2f}f/J;tpu_model={eff_tpu:.2f}f/J;"
+                     f"ratio={effs[-1]:.2f}x"))
+    rows.append(("power/mean_efficiency_gain_modeled", 0.0,
+                 f"{np.mean(effs):.1f}x (paper: 8.58x, FPGA 28W vs CPU 16.3W)"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,75 @@
+"""Summarise dry-run artifacts into the §Dry-run / §Roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--dir results/dryrun]
+
+Emits markdown to stdout (EXPERIMENTS.md embeds the output) and the bench
+CSV rows when called from benchmarks.run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(dir_: pathlib.Path):
+    recs = {}
+    for p in sorted(dir_.glob("*.json")):
+        try:
+            recs[p.stem] = json.loads(p.read_text())
+        except json.JSONDecodeError:
+            continue
+    return recs
+
+
+def markdown(dir_: pathlib.Path = RESULTS, mesh: str = "single") -> str:
+    recs = load(dir_)
+    lines = [
+        "| arch | shape | GB/dev | fits 16G | compute s | memory s | "
+        "collective s | dominant | useful frac | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for stem, rec in recs.items():
+        if not stem.endswith(f"__{mesh}"):
+            continue
+        arch, shape, _ = stem.split("__")
+        if rec.get("skipped"):
+            lines.append(f"| {arch} | {shape} | — | — | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        if rec.get("status") != "ok":
+            lines.append(f"| {arch} | {shape} | — | — | — | — | — | "
+                         f"ERROR | — | — |")
+            continue
+        m = rec["memory"]
+        r = rec["roofline"]
+        gb = (m["argument_bytes"] + m["temp_bytes"]) / 2 ** 30
+        lines.append(
+            f"| {arch} | {shape} | {gb:.1f} | "
+            f"{'yes' if m['fits_v5e_16g'] else 'NO'} | "
+            f"{r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+            f"{r['collective_s']:.4f} | {r['dominant']} | "
+            f"{r['useful_fraction']:.3f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def run():
+    """Bench-CSV rows: one per completed cell (single-pod mesh)."""
+    rows = []
+    for stem, rec in load(RESULTS).items():
+        if rec.get("status") != "ok" or not stem.endswith("__single"):
+            continue
+        r = rec["roofline"]
+        rows.append((f"roofline/{stem}", r["step_time_s"] * 1e6,
+                     f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=str(RESULTS))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+    print(markdown(pathlib.Path(args.dir), args.mesh))

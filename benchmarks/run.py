@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table. Prints
+``name,us_per_call,derived`` CSV.
+
+  table3 -> registration_accuracy  (Table III: RMSE parity)
+  table4 -> registration_latency   (Table IV: latency + acceleration)
+  table2 -> kernel_resources       (Table II: resource budget)
+  power  -> power_efficiency       (§IV-D: perf/W, modeled)
+  roofline -> roofline_report      (dry-run roofline summaries)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (kernel_resources, power_efficiency,
+                        registration_accuracy, registration_latency,
+                        roofline_report)
+from benchmarks.common import emit
+
+SUITES = {
+    "table3": registration_accuracy.run,
+    "table4": registration_latency.run,
+    "table2": kernel_resources.run,
+    "power": power_efficiency.run,
+    "roofline": roofline_report.run,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(SUITES), default=None)
+    args = ap.parse_args(argv)
+    failed = []
+    for name, fn in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            emit(fn())
+        except Exception as e:  # report and continue; fail at the end
+            failed.append((name, e))
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmark suites failed: {[n for n, _ in failed]}")
+
+
+if __name__ == "__main__":
+    main()

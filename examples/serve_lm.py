@@ -1,0 +1,15 @@
+"""Serve a small model with batched requests (prefill + decode engine).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve as serve_driver
+
+
+def main():
+    serve_driver.main(["--arch", "qwen2-0.5b", "--smoke", "--batch", "4",
+                       "--prompt-len", "32", "--gen", "32"])
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

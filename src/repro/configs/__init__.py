@@ -1,0 +1,6 @@
+"""Assigned architecture configs + registry (--arch lookup)."""
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+from repro.configs.registry import get_config, get_smoke, list_archs
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "get_config", "get_smoke",
+           "list_archs"]

@@ -1,0 +1,125 @@
+"""Brute-force exact nearest-neighbour search — the heart of FPPS.
+
+The paper replaces k-d trees with a fully parallel exact search (Discussion
+§V-A: tree traversal is sequential/branchy; brute force is dense, regular and
+pipelineable). On TPU this argument is even stronger: the pairwise-distance
+expansion
+
+    ||p - q||² = ||p||² + ||q||² - 2 p·q
+
+turns the O(N·M) distance grid into an (N,3)x(3,M) matmul — MXU work — plus
+rank-1 updates, and the argmin is a lane reduction on the VPU.
+
+Two implementations:
+  * this module — pure XLA (jnp) with explicit target-chunking so the peak
+    memory stays bounded; used by the default path, the distributed path, and
+    the dry-run (it lowers on any backend).
+  * ``repro.kernels.nn_search`` — the Pallas TPU kernel with explicit VMEM
+    BlockSpec tiling and a fused transform prologue (validated in interpret
+    mode against ``repro.kernels.ref``).
+
+Both return (min_dist_sq, argmin_index) exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists(src: jax.Array, dst: jax.Array) -> jax.Array:
+    """(N,3),(M,3) -> (N,M) squared distances via the matmul expansion."""
+    # fp32 accumulation: metric data; see DESIGN.md §2 (precision note).
+    sn = jnp.sum(src * src, axis=-1, keepdims=True)          # (N,1)
+    dn = jnp.sum(dst * dst, axis=-1, keepdims=True).T        # (1,M)
+    cross = src @ dst.T                                       # MXU
+    d2 = sn + dn - 2.0 * cross
+    return jnp.maximum(d2, 0.0)  # clamp fp roundoff
+
+
+def nn_search(src: jax.Array, dst: jax.Array, *, chunk: int = 2048,
+              dst_valid: jax.Array | None = None,
+              score_dtype: str = "fp32"):
+    """Exact NN of each src point in dst.
+
+    Args:
+      src: (N, 3) query points.
+      dst: (M, 3) target cloud.
+      chunk: target-cloud chunk size — bounds the (N, chunk) live tile, the
+        XLA analogue of the kernel's BlockSpec. M need not divide chunk.
+      dst_valid: optional (M,) bool mask for padded target slots.
+      score_dtype: "fp32" (exact, default) or "bf16" — halves the distance
+        -tile HBM traffic (§Perf iteration A2). bf16 scores can mis-rank
+        near-tied candidates (~1e-2 relative); ICP accuracy parity under
+        bf16 is validated empirically in the benchmark suite and it stays
+        opt-in.
+
+    Returns:
+      (d2, idx): (N,) squared distance to NN and (N,) int32 index into dst.
+    """
+    n = src.shape[0]
+    m = dst.shape[0]
+    pad = (-m) % chunk
+    if pad:
+        # Large-but-FINITE padding: inf coords would produce inf-inf = NaN in
+        # the matmul expansion and force a full NaN-scrub read+write pass
+        # over every (N, chunk) distance tile (~1/3 of the sweep's HBM
+        # traffic — §Perf iteration A1). 1e15 keeps padded d2 ~1e30, far
+        # beyond any metric scene, with no NaN path.
+        dst = jnp.concatenate(
+            [dst, jnp.full((pad, 3), jnp.asarray(1e15, dst.dtype))], axis=0)
+        if dst_valid is not None:
+            dst_valid = jnp.concatenate(
+                [dst_valid, jnp.zeros((pad,), dtype=bool)], axis=0)
+    m_padded = dst.shape[0]
+    n_chunks = m_padded // chunk
+    dst_chunks = dst.reshape(n_chunks, chunk, 3)
+    valid_chunks = (dst_valid.reshape(n_chunks, chunk)
+                    if dst_valid is not None else None)
+
+    sn = jnp.sum(src * src, axis=-1)  # (N,) hoisted out of the scan
+    lowp = score_dtype == "bf16"
+    src_c = src.astype(jnp.bfloat16) if lowp else src
+
+    def body(carry, xs):
+        best_d2, best_idx = carry
+        if valid_chunks is None:
+            dchunk, base = xs
+            valid = None
+        else:
+            dchunk, base, valid = xs
+        dn = jnp.sum(dchunk * dchunk, axis=-1)                # (chunk,)
+        if lowp:
+            # bf16 tile end-to-end: the MXU emits bf16, the (N, chunk)
+            # buffer and its argmin read are half-width.
+            cross = jax.lax.dot_general(
+                src_c, dchunk.astype(jnp.bfloat16).T,
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.bfloat16)
+            d2 = (sn.astype(jnp.bfloat16)[:, None]
+                  + dn.astype(jnp.bfloat16)[None, :] - 2.0 * cross)
+        else:
+            cross = src @ dchunk.T                             # (N, chunk) MXU
+            d2 = sn[:, None] + dn[None, :] - 2.0 * cross
+        if valid is not None:
+            d2 = jnp.where(valid[None, :], d2, jnp.asarray(jnp.inf, d2.dtype))
+        local_idx = jnp.argmin(d2, axis=1)
+        local_d2 = jnp.take_along_axis(d2, local_idx[:, None],
+                                       axis=1)[:, 0].astype(jnp.float32)
+        improved = local_d2 < best_d2
+        best_d2 = jnp.where(improved, local_d2, best_d2)
+        best_idx = jnp.where(improved, base + local_idx.astype(jnp.int32), best_idx)
+        return (best_d2, best_idx), None
+
+    init = (jnp.full((n,), jnp.inf, dtype=src.dtype),
+            jnp.zeros((n,), dtype=jnp.int32))
+    bases = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
+    xs = (dst_chunks, bases) if valid_chunks is None else (dst_chunks, bases, valid_chunks)
+    (best_d2, best_idx), _ = jax.lax.scan(body, init, xs)
+    return jnp.maximum(best_d2, 0.0), best_idx
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def nn_search_jit(src, dst, chunk: int = 2048):
+    return nn_search(src, dst, chunk=chunk)

@@ -1,0 +1,1 @@
+"""Data substrate: synthetic LiDAR scenes + LM token pipelines."""

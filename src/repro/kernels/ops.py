@@ -1,0 +1,65 @@
+"""jit'd public wrappers around the Pallas NN kernel.
+
+Handles padding to tile multiples, the once-per-frame target augmentation,
+and the per-iteration source augmentation + unpadding. These wrappers have
+the same (src, dst[, T]) -> (d2, idx) contract as ``repro.core.nn_search``
+so they can be dropped into ``core.icp`` via the ``nn_fn`` hook.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.nn_search import nn_search_kernel
+
+
+def _round_up(x: int, mult: int) -> int:
+    return x + (-x) % mult
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "interpret"))
+def nn_search_pallas(src: jax.Array, dst: jax.Array,
+                     T: jax.Array | None = None,
+                     *, bn: int = 512, bm: int = 1024,
+                     interpret: bool = False):
+    """NN of each (optionally T-transformed) src point in dst via the kernel.
+
+    src: (N,3), dst: (M,3); returns ((N,) fp32 d2, (N,) int32 idx).
+    Shapes need not be tile-aligned; padding is handled here. Padded target
+    slots carry a +1e30 bias so they never win; padded source rows are
+    sliced off.
+    """
+    n, m = src.shape[0], dst.shape[0]
+    n_pad, m_pad = _round_up(n, bn), _round_up(m, bm)
+    src_aug = ref.augment_source(src, T, pad_to=n_pad)
+    dst_aug = ref.augment_target(dst, pad_to=m_pad)
+    d2, idx = nn_search_kernel(src_aug, dst_aug, bn=bn, bm=bm,
+                               interpret=interpret)
+    return jnp.maximum(d2[:n], 0.0), idx[:n]
+
+
+def make_frame_engine(dst: jax.Array, *, bn: int = 512, bm: int = 1024,
+                      interpret: bool = False):
+    """Pre-augment a target frame once; return nn_fn(src, T) for ICP loops.
+
+    This is the intended production shape: the (8, M) augmented target is
+    computed once per frame (the BRAM-resident analogue) and closed over by
+    every ICP iteration.
+    """
+    m = dst.shape[0]
+    m_pad = _round_up(m, bm)
+    dst_aug = ref.augment_target(dst, pad_to=m_pad)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def nn_fn(src: jax.Array, T: jax.Array | None = None):
+        n = src.shape[0]
+        n_pad = _round_up(n, bn)
+        src_aug = ref.augment_source(src, T, pad_to=n_pad)
+        d2, idx = nn_search_kernel(src_aug, dst_aug, bn=bn, bm=bm,
+                                   interpret=interpret)
+        return jnp.maximum(d2[:n], 0.0), idx[:n]
+
+    return nn_fn

@@ -1,0 +1,1 @@
+"""Launch substrate: meshes, partitioning rules, dry-run, drivers."""

@@ -1,0 +1,42 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run must set
+XLA_FLAGS before any device query, and tests must keep seeing 1 CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16,16)=(data,model), 256 chips (one v5e pod's worth).
+    Multi-pod: (2,16,16)=(pod,data,model), 512 chips across 2 pods; the
+    ``pod`` axis is the DCN/cross-pod dimension."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for subprocess tests (8 host devices)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def batch_axes_for(mesh, global_batch: int):
+    """Largest prefix of (pod, data) axes that divides the global batch.
+
+    decode batch 1 (long_500k) -> () = replicated; batch 128 on the
+    multi-pod mesh -> ("pod","data") = 32-way; etc."""
+    candidates = [ax for ax in ("pod", "data") if ax in mesh.axis_names]
+    chosen: list[str] = []
+    size = 1
+    for ax in candidates:
+        ax_size = mesh.shape[ax]
+        if global_batch % (size * ax_size) == 0:
+            chosen.append(ax)
+            size *= ax_size
+    return tuple(chosen)

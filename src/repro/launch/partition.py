@@ -1,0 +1,160 @@
+"""Logical-axis partitioning rules (MaxText-style) + activation constraints.
+
+Parameters and activations are annotated with *logical* axis names; a rule
+table maps logical names to mesh axes. Swapping a whole sharding strategy
+(e.g. expert-parallel vs expert-tensor-parallel MoE) is a one-line rule
+change — this is what the §Perf iterations toggle.
+
+Models call ``aconstraint(x, (..logical names..))``; outside a rules context
+it is a no-op, so the same model code runs on one CPU device in tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical name -> mesh axis (or tuple of axes, or None)
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),     # DP across pods and the data axis
+    "tokens": ("pod", "data"),    # flattened batch*seq dim (MoE dispatch)
+    "seq": None,                  # SP toggled per-shape in the perf loop
+    "embed": None,                # activation d_model dim
+    "heads": "model",             # TP: attention heads
+    "kv_heads": "model",
+    "qk_lora": None,
+    "mlp": "model",               # TP: FFN hidden
+    "vocab": "model",             # TP: embedding/logits vocab dim
+    "expert": "model",            # EP: expert dim of MoE weights/buffers
+    "expert_mlp": None,           # alternative: TP inside experts
+    "fsdp": "data",               # weight-shard dim for FSDP
+    "conv": None,
+    "state": None,
+    # decode KV-cache sequence dim. Sharding it over "model" splits the
+    # cache (and the attention contraction: GSPMD turns the softmax
+    # normalizer into a tiny all-reduce — flash-decoding-style split-K)
+    # across chips whose kv-head count is below the TP degree.
+    "kv_seq": "model",
+    # implementation selectors (not axis names):
+    #   gspmd_sort    — single-program sort dispatch, GSPMD infers comms
+    #                    (fallback; baseline tables use this via --rule)
+    #   shard_map_ep  — explicit local-sort + all-to-all expert parallelism
+    #                    (production default; §Perf B3: 5.2x step-bound win)
+    "moe_impl": "shard_map_ep",
+}
+
+
+def active_context():
+    """(mesh, rules) of the innermost partitioning() context, or None."""
+    return _active.get()
+
+_active: contextvars.ContextVar = contextvars.ContextVar(
+    "partition_ctx", default=None)  # (mesh, rules) or None
+
+
+@contextlib.contextmanager
+def partitioning(mesh: Mesh, rules: Mapping[str, object] | None = None):
+    """Activate a mesh + logical rule table for model-internal constraints."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    # Drop axis names the mesh doesn't have (e.g. "pod" on the single-pod
+    # mesh). Keys starting with "impl" carry implementation selectors
+    # (e.g. moe_impl), not axis names — passed through untouched.
+    def _clean(k, v):
+        if k.endswith("_impl"):
+            return v[0] if isinstance(v, tuple) and v else v
+        if v is None:
+            return None
+        axes = (v,) if isinstance(v, str) else tuple(v)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        return axes if axes else None
+    merged = {k: _clean(k, v) for k, v in merged.items()}
+    token = _active.set((mesh, merged))
+    try:
+        with mesh:
+            yield merged
+    finally:
+        _active.reset(token)
+
+
+def logical_to_spec(names: Sequence[str | None]) -> P:
+    ctx = _active.get()
+    if ctx is None:
+        return P()
+    _, rules = ctx
+    return P(*[rules.get(n) if n else None for n in names])
+
+
+def aconstraint(x: jax.Array, names: Sequence[str | None]) -> jax.Array:
+    """Activation sharding constraint by logical names; no-op outside a
+    partitioning() context. Divisibility-aware: a mesh axis is dropped for
+    any dim it does not divide evenly (e.g. 14 heads on a 16-way model
+    axis) instead of forcing padded/replicated shardings."""
+    ctx = _active.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    specs = []
+    used: set = set()  # a mesh axis may appear on at most one dim
+    for dim, n in zip(x.shape, tuple(names)[:x.ndim]):
+        v = rules.get(n) if n else None
+        if v is None:
+            specs.append(None)
+            continue
+        axes = (v,) if isinstance(v, str) else tuple(v)
+        kept, size = [], 1
+        for a in axes:
+            if (a in mesh.axis_names and a not in used
+                    and dim % (size * mesh.shape[a]) == 0):
+                kept.append(a)
+                size *= mesh.shape[a]
+        used.update(kept)
+        specs.append(tuple(kept) if kept else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*specs)))
+
+
+def param_sharding(logical_tree, mesh: Mesh,
+                   rules: Mapping[str, object] | None = None,
+                   abstract_tree=None):
+    """Map a pytree of logical-name tuples to NamedShardings.
+
+    When ``abstract_tree`` (matching ShapeDtypeStructs) is given, mesh axes
+    that do not divide the corresponding dim are dropped (e.g. a 50280
+    vocab on a 16-way model axis stays replicated)."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    is_names = lambda t: isinstance(t, tuple) and all(
+        isinstance(e, (str, type(None))) for e in t)
+
+    def one(names, leaf=None):
+        axes = []
+        used: set = set()
+        for i, n in enumerate(names):
+            v = merged.get(n) if n else None
+            if v is None:
+                axes.append(None)
+                continue
+            cand = (v,) if isinstance(v, str) else tuple(v)
+            kept, size = [], 1
+            dim = leaf.shape[i] if leaf is not None else None
+            for a in cand:
+                if a not in mesh.axis_names or a in used:
+                    continue
+                if dim is not None and dim % (size * mesh.shape[a]) != 0:
+                    continue
+                kept.append(a)
+                size *= mesh.shape[a]
+            used.update(kept)
+            axes.append(tuple(kept) if kept else None)
+        return NamedSharding(mesh, P(*axes))
+
+    if abstract_tree is None:
+        return jax.tree_util.tree_map(one, logical_tree, is_leaf=is_names)
+    return jax.tree_util.tree_map(one, logical_tree, abstract_tree,
+                                  is_leaf=is_names)

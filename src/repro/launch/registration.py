@@ -1,0 +1,64 @@
+"""Point-cloud registration driver — the paper's application, end to end.
+
+    PYTHONPATH=src python -m repro.launch.registration --seq 0 --frames 5
+
+Replicates the FPPS evaluation protocol (§IV-A): per frame, 4096 points
+sampled from the source cloud, full target cloud as the NN space,
+max 50 iterations, 1.0 m gate, 1e-5 epsilon; reports RMSE + latency for
+our engine and the k-d tree CPU baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import FppsICP
+from repro.core.baseline import kdtree_icp
+from repro.data.pointcloud import SceneConfig, frame_pair
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seq", type=int, default=0)
+    ap.add_argument("--frames", type=int, default=5)
+    ap.add_argument("--samples", type=int, default=4096)
+    ap.add_argument("--engine", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--reduced", action="store_true",
+                    help="smaller synthetic scenes (fast CI)")
+    args = ap.parse_args(argv)
+
+    cfg = (SceneConfig(n_ground=9000, n_walls=6000, n_poles=1800,
+                       n_clutter=1700, extent=40.0, sensor_range=45.0)
+           if args.reduced else SceneConfig())
+
+    rows = []
+    for frame in range(args.frames):
+        src, dst, T_gt = frame_pair(args.seq, frame, cfg, args.samples)
+        reg = FppsICP(engine=args.engine)
+        reg.setInputSource(src)
+        reg.setInputTarget(dst)
+        reg.setMaxCorrespondenceDistance(1.0)
+        reg.setMaxIterationCount(50)
+        reg.setTransformationEpsilon(1e-5)
+        t0 = time.time()
+        T = reg.align()
+        t_ours = time.time() - t0
+        t0 = time.time()
+        base = kdtree_icp(src, dst)
+        t_base = time.time() - t0
+        t_err = float(np.linalg.norm(T[:3, 3] - T_gt[:3, 3]))
+        rows.append((frame, reg.getFitnessScore(), base.rmse, t_ours, t_base,
+                     t_err))
+        print(f"frame {frame}: rmse ours={rows[-1][1]:.4f} "
+              f"kdtree={rows[-1][2]:.4f} | t ours={t_ours*1e3:7.1f}ms "
+              f"kdtree={t_base*1e3:7.1f}ms | trans err {t_err:.3f} m")
+    d = np.array([[r[1], r[2]] for r in rows])
+    print(f"\nmean RMSE ours={d[:,0].mean():.4f} kdtree={d[:,1].mean():.4f} "
+          f"delta={abs(d[:,0].mean()-d[:,1].mean()):.4f} (paper: <=0.01)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, zero allocation. The dry-run lowers against
+these; the drivers build real arrays with the same shapes/shardings.
+
+Per assignment: [audio]/[vlm] archs get precomputed frame/patch embeddings
+from the (stubbed) modality frontend instead of token ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.mesh import batch_axes_for
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """Abstract inputs for the step kind. Returns (specs dict, logical axes
+    dict) where axes name the leading dims for sharding."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train",):
+        if cfg.embed_inputs:
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+            axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        else:
+            specs = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                    jnp.bfloat16),
+                     "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+            axes = {"embeds": ("batch", "seq", None),
+                    "labels": ("batch", "seq")}
+        return specs, axes
+    if shape.kind == "prefill":
+        if cfg.embed_inputs:
+            return ({"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)},
+                    {"tokens": ("batch", "seq")})
+        return ({"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                jnp.bfloat16)},
+                {"embeds": ("batch", "seq", None)})
+    if shape.kind == "decode":
+        if cfg.embed_inputs:
+            return ({"token": jax.ShapeDtypeStruct((b,), jnp.int32),
+                     "pos": jax.ShapeDtypeStruct((), jnp.int32)},
+                    {"token": ("batch",), "pos": ()})
+        return ({"embed": jax.ShapeDtypeStruct((b, cfg.d_model), jnp.bfloat16),
+                 "pos": jax.ShapeDtypeStruct((), jnp.int32)},
+                {"embed": ("batch", None), "pos": ()})
+    raise ValueError(shape.kind)
+
+
+def resolve_batch_rules(mesh, shape: ShapeConfig) -> dict:
+    """Per-shape logical rules: batch axes chosen by divisibility."""
+    return {"batch": batch_axes_for(mesh, shape.global_batch)}
+
+
+def sharding_for_axes(mesh, axes, rules: dict):
+    def one(names):
+        specs = []
+        for n in names:
+            v = rules.get(n) if n else None
+            if v is None:
+                specs.append(None)
+            else:
+                cand = (v,) if isinstance(v, str) else tuple(
+                    a for a in v if a in mesh.axis_names)
+                specs.append(cand if cand else None)
+        return NamedSharding(mesh, P(*specs))
+    return jax.tree_util.tree_map(
+        one, axes,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(e, (str, type(None))) for e in t))

@@ -1,0 +1,5 @@
+"""Assigned-architecture substrate: a config-driven decoder-LM zoo.
+
+Pure-function JAX models (no flax): params are pytrees of jnp arrays with a
+stacked leading layer dim for scanned blocks. Sharding is applied externally
+via logical-axis rules (repro.launch.partition)."""

@@ -1,0 +1,392 @@
+"""Attention variants: GQA/MQA/MHA (full, query-blocked, local-window) and
+DeepSeek-style MLA (multi-head latent attention), with KV caches for decode.
+
+Implementation notes
+  * Scores/softmax in fp32; einsum operands bf16 (MXU) unless configured.
+  * ``blocked`` attention scans over query blocks with exact per-row softmax
+    against the full K — memory O(q_block × S_kv) instead of O(S²) — the
+    XLA-level equivalent of memory-efficient attention (Rabe & Staats). The
+    dry-run/roofline path uses it for the 32k shapes.
+  * Local attention uses a ring KV cache of size ``window`` during decode —
+    this is what makes recurrentgemma's `long_500k` cell O(window), not O(S).
+  * MLA decode uses the weight-absorption trick: queries are projected into
+    the compressed latent space so the cache stays (r_kv + d_rope) per token.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    window: int = 0             # 0 => global causal
+    q_block: int = 0            # 0 => unblocked (full scores)
+    # MLA
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+    rms_eps: float = 1e-5
+    kv_quant: bool = False      # int8 KV cache (per-vector scales)
+
+
+# ---------------------------------------------------------------------------
+# GQA family
+# ---------------------------------------------------------------------------
+def gqa_init(key, cfg: AttnConfig, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(kq, cfg.d_model, cfg.n_heads * cfg.d_head, dtype,
+                           bias=cfg.qkv_bias),
+        "wk": L.dense_init(kk, cfg.d_model, cfg.n_kv_heads * cfg.d_head, dtype,
+                           bias=cfg.qkv_bias),
+        "wv": L.dense_init(kv, cfg.d_model, cfg.n_kv_heads * cfg.d_head, dtype,
+                           bias=cfg.qkv_bias),
+        "wo": L.dense_init(ko, cfg.n_heads * cfg.d_head, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.d_head,), dtype)
+        p["k_norm"] = jnp.ones((cfg.d_head,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: AttnConfig, positions):
+    b, s, _ = x.shape
+    q = L.dense(p["wq"], x).reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = L.dense(p["wk"], x).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = L.dense(p["wv"], x).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = L.rms_head_norm(p["q_norm"], q, cfg.rms_eps)
+        k = L.rms_head_norm(p["k_norm"], k, cfg.rms_eps)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    from repro.launch.partition import aconstraint
+    q = aconstraint(q, ("batch", "seq", "heads", None))
+    k = aconstraint(k, ("batch", "seq", "kv_heads", None))
+    v = aconstraint(v, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def _sdpa(q, k, v, q_pos, kv_pos, *, window: int, scale: float):
+    """q: (B,Sq,H,dh); k,v: (B,Skv,Hkv,dh); positions broadcastable (Sq,)/(Skv,).
+
+    Causal (+ optional local-window) grouped attention. kv_pos < 0 marks
+    invalid (unwritten ring) slots.
+    """
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    mask = kv_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+    mask &= kv_pos[None, :] >= 0
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, dh)
+
+
+def gqa_forward(p, x, positions, cfg: AttnConfig):
+    """Training/prefill forward (no cache). positions: (S,).
+
+    KV heads are repeated up to the full head count (Megatron-style
+    repeat-KV): the plain "bqhd,bkhd" einsum then shards cleanly on the
+    head axis even when n_kv_heads < TP degree — the grouped
+    (hkv, g)-reshape variant breaks GSPMD head sharding (observed: fully
+    replicated 34 GB score tensors on llama3-405b). Decode keeps the
+    grouped path: repeating a 32k-entry cache would be madness."""
+    from repro.launch.partition import aconstraint
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    g = cfg.n_heads // cfg.n_kv_heads
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        k = aconstraint(k, ("batch", "seq", "heads", None))
+        v = aconstraint(v, ("batch", "seq", "heads", None))
+    scale = cfg.d_head ** -0.5
+    if cfg.q_block and x.shape[1] > cfg.q_block and x.shape[1] % cfg.q_block == 0:
+        nb = x.shape[1] // cfg.q_block
+        qb = q.reshape(x.shape[0], nb, cfg.q_block, cfg.n_heads, cfg.d_head)
+        pb = positions.reshape(nb, cfg.q_block)
+
+        def step(_, blk):
+            qblk, posblk = blk
+            o = _sdpa(qblk, k, v, posblk, positions, window=cfg.window,
+                      scale=scale)
+            return None, o
+
+        _, out = jax.lax.scan(step, None, (qb.swapaxes(0, 1),
+                                           pb))
+        out = out.swapaxes(0, 1).reshape(x.shape[0], x.shape[1], -1)
+    else:
+        out = _sdpa(q, k, v, positions, positions, window=cfg.window,
+                    scale=scale).reshape(x.shape[0], x.shape[1], -1)
+    return L.dense(p["wo"], out)
+
+
+def _kv_quantize(x):
+    """(..., d_head) -> (int8 values, fp16-range scales (...,)). Per-vector
+    absmax scaling (KIVI/KVQuant-style per-token-per-head granularity)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                        1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _kv_dequantize(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def gqa_init_cache(batch: int, max_len: int, cfg: AttnConfig,
+                   dtype=jnp.bfloat16):
+    size = min(cfg.window, max_len) if cfg.window else max_len
+    shape = (batch, size, cfg.n_kv_heads, cfg.d_head)
+    if cfg.kv_quant:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:-1], jnp.bfloat16),
+            "v_scale": jnp.zeros(shape[:-1], jnp.bfloat16),
+            "pos": jnp.full((size,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        # per-slot absolute position; -1 == never written (ring validity)
+        "pos": jnp.full((size,), -1, jnp.int32),
+    }
+
+
+def gqa_prefill_cache(p, x, positions, cfg: AttnConfig, max_len: int):
+    """Run prefill and return (output, cache populated with S entries)."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = gqa_forward(p, x, positions, cfg)  # recomputes qkv; acceptable: XLA CSEs
+    size = min(cfg.window, max_len) if cfg.window else max_len
+    s = x.shape[1]
+    cache = gqa_init_cache(x.shape[0], max_len, cfg, k.dtype)
+    if cfg.kv_quant:
+        (k, k_sc), (v, v_sc) = _kv_quantize(k), _kv_quantize(v)
+    if cfg.window:
+        # Ring invariant: position p lives at slot p % size — decode writes
+        # with the same rule, so prefill must scatter accordingly.
+        if s > size:
+            k, v, positions = k[:, -size:], v[:, -size:], positions[-size:]
+            if cfg.kv_quant:
+                k_sc, v_sc = k_sc[:, -size:], v_sc[:, -size:]
+        slots = jnp.mod(positions.astype(jnp.int32), size)
+        cache["k"] = cache["k"].at[:, slots].set(k.astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[:, slots].set(v.astype(cache["v"].dtype))
+        if cfg.kv_quant:
+            cache["k_scale"] = cache["k_scale"].at[:, slots].set(k_sc)
+            cache["v_scale"] = cache["v_scale"].at[:, slots].set(v_sc)
+        cache["pos"] = cache["pos"].at[slots].set(positions.astype(jnp.int32))
+    else:
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+        if cfg.kv_quant:
+            cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], k_sc, 0, axis=1)
+            cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], v_sc, 0, axis=1)
+        cache["pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], positions.astype(jnp.int32), 0, axis=0)
+    return out, cache
+
+
+def gqa_decode_step(p, x, pos, cache, cfg: AttnConfig):
+    """x: (B,1,D); pos: scalar int32 absolute position. Returns (out, cache)."""
+    positions = pos[None].astype(jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    size = cache["k"].shape[1]
+    slot = (pos % size).astype(jnp.int32) if cfg.window else pos.astype(jnp.int32)
+    cache = dict(cache)
+    if cfg.kv_quant:
+        (kq, k_sc), (vq, v_sc) = _kv_quantize(k), _kv_quantize(v)
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], kq, slot, axis=1)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], vq, slot, axis=1)
+        cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_scale"], k_sc, slot, axis=1)
+        cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v_scale"], v_sc, slot, axis=1)
+        k_full = _kv_dequantize(cache["k"], cache["k_scale"], k.dtype)
+        v_full = _kv_dequantize(cache["v"], cache["v_scale"], v.dtype)
+    else:
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        k_full, v_full = cache["k"], cache["v"]
+    cache["pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], positions, slot, axis=0)
+    out = _sdpa(q, k_full, v_full, positions, cache["pos"],
+                window=cfg.window, scale=cfg.d_head ** -0.5)
+    return L.dense(p["wo"], out.reshape(x.shape[0], 1, -1)), cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 / MiniCPM3 style)
+# ---------------------------------------------------------------------------
+def mla_init(key, cfg: AttnConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    dqk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    p = {
+        "wdq": L.dense_init(ks[0], cfg.d_model, cfg.q_lora_rank, dtype),
+        "q_norm": L.rmsnorm_init(cfg.q_lora_rank, dtype),
+        "wuq": L.dense_init(ks[1], cfg.q_lora_rank, cfg.n_heads * dqk, dtype),
+        # fused kv-down + rope-k projection, DeepSeek layout
+        "wdkv": L.dense_init(ks[2], cfg.d_model,
+                             cfg.kv_lora_rank + cfg.qk_rope_head_dim, dtype),
+        "kv_norm": L.rmsnorm_init(cfg.kv_lora_rank, dtype),
+        "wuk": L.dense_init(ks[3], cfg.kv_lora_rank,
+                            cfg.n_heads * cfg.qk_nope_head_dim, dtype),
+        "wuv": L.dense_init(ks[4], cfg.kv_lora_rank,
+                            cfg.n_heads * cfg.v_head_dim, dtype),
+        "wo": L.dense_init(ks[5], cfg.n_heads * cfg.v_head_dim, cfg.d_model,
+                           dtype),
+    }
+    return p
+
+
+def _mla_q(p, x, positions, cfg: AttnConfig):
+    b, s, _ = x.shape
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = L.rmsnorm(p["q_norm"], L.dense(p["wdq"], x), cfg.rms_eps)
+    q = L.dense(p["wuq"], cq).reshape(b, s, cfg.n_heads, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, positions, cfg: AttnConfig):
+    dr = cfg.qk_rope_head_dim
+    ckv = L.dense(p["wdkv"], x)
+    c, k_rope = ckv[..., :cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank:]
+    c = L.rmsnorm(p["kv_norm"], c, cfg.rms_eps)
+    k_rope = L.apply_rope(k_rope, positions, cfg.rope_theta,
+                          has_head_dim=False)           # (B,S,dr) shared
+    return c, k_rope
+
+
+def _mla_sdpa(q_nope, q_rope, k_nope, k_rope, v, q_pos, kv_pos, scale):
+    scores = (jnp.einsum("bqhd,bkhd->bhqk", q_nope.astype(jnp.float32),
+                         k_nope.astype(jnp.float32))
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32))) * scale
+    mask = kv_pos[None, :] <= q_pos[:, None]
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+
+def mla_forward(p, x, positions, cfg: AttnConfig):
+    """Training/prefill: decompress K/V (standard path). Honors
+    cfg.q_block (query-blocked exact attention, bounded score memory)."""
+    b, s, _ = x.shape
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)
+    c, k_rope = _mla_latent(p, x, positions, cfg)
+    k_nope = L.dense(p["wuk"], c).reshape(b, s, cfg.n_heads, dn)
+    v = L.dense(p["wuv"], c).reshape(b, s, cfg.n_heads, dv)
+    scale = (dn + dr) ** -0.5
+    qb = cfg.q_block
+    if qb and s > qb and s % qb == 0:
+        nb = s // qb
+
+        def step(_, blk):
+            qn, qr, posblk = blk
+            return None, _mla_sdpa(qn, qr, k_nope, k_rope, v, posblk,
+                                   positions, scale)
+
+        _, out = jax.lax.scan(
+            step, None,
+            (q_nope.reshape(b, nb, qb, cfg.n_heads, dn).swapaxes(0, 1),
+             q_rope.reshape(b, nb, qb, cfg.n_heads, dr).swapaxes(0, 1),
+             positions.reshape(nb, qb)))
+        out = out.swapaxes(0, 1).reshape(b, s, -1)
+    else:
+        out = _mla_sdpa(q_nope, q_rope, k_nope, k_rope, v, positions,
+                        positions, scale).reshape(b, s, -1)
+    return L.dense(p["wo"], out)
+
+
+def mla_init_cache(batch: int, max_len: int, cfg: AttnConfig,
+                   dtype=jnp.bfloat16):
+    return {
+        "c": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        "pos": jnp.full((max_len,), -1, jnp.int32),
+    }
+
+
+def mla_prefill_cache(p, x, positions, cfg: AttnConfig, max_len: int):
+    out = mla_forward(p, x, positions, cfg)
+    c, k_rope = _mla_latent(p, x, positions, cfg)
+    cache = mla_init_cache(x.shape[0], max_len, cfg, c.dtype)
+    cache["c"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["c"], c.astype(cache["c"].dtype), 0, axis=1)
+    cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), 0, axis=1)
+    cache["pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], positions.astype(jnp.int32), 0, axis=0)
+    return out, cache
+
+
+def mla_decode_step(p, x, pos, cache, cfg: AttnConfig):
+    """Weight-absorbed MLA decode: scores/outputs computed in latent space;
+    per-token cache cost is kv_lora_rank + qk_rope_head_dim."""
+    b = x.shape[0]
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    positions = pos[None].astype(jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)           # (B,1,H,*)
+    c_new, k_rope_new = _mla_latent(p, x, positions, cfg)   # (B,1,r),(B,1,dr)
+    cache = dict(cache)
+    cache["c"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["c"], c_new.astype(cache["c"].dtype), pos, axis=1)
+    cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    cache["pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], positions, pos, axis=0)
+    # absorb W_uk into q: q_lat[b,h,r] = Σ_d q_nope[b,h,d] wuk[r, h*dn+d]
+    wuk = p["wuk"]["kernel"].reshape(cfg.kv_lora_rank, cfg.n_heads, dn)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    scale = (dn + dr) ** -0.5
+    scores = (jnp.einsum("bqhr,bkr->bhqk", q_lat,
+                         cache["c"].astype(jnp.float32))
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                           cache["k_rope"].astype(jnp.float32))) * scale
+    mask = (cache["pos"][None, :] <= positions[:, None]) & (cache["pos"][None, :] >= 0)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhqk,bkr->bqhr", probs,
+                         cache["c"].astype(jnp.float32))    # (B,1,H,r)
+    wuv = p["wuv"]["kernel"].reshape(cfg.kv_lora_rank, cfg.n_heads, dv)
+    out = jnp.einsum("bqhr,rhd->bqhd", out_lat, wuv.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(b, 1, -1)
+    return L.dense(p["wo"], out), cache

@@ -1,0 +1,120 @@
+"""Shared primitive layers: norms, RoPE, dense MLPs, embeddings.
+
+Conventions:
+  * params are dicts of arrays; initialisers take an rng key and return the
+    dict. Matmul weights are stored (d_in, d_out).
+  * activations default to bf16, params to fp32 master (cast at use); math
+    that is precision-sensitive (norm reductions, softmax, rope) runs fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Initializer = jax.nn.initializers.Initializer
+
+default_kernel_init = jax.nn.initializers.normal(stddev=0.02)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               bias: bool = False):
+    p = {"kernel": default_kernel_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x, compute_dtype=jnp.bfloat16):
+    y = x.astype(compute_dtype) @ p["kernel"].astype(compute_dtype)
+    if "bias" in p:
+        y = y + p["bias"].astype(compute_dtype)
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps: float = 1e-6):
+    """Per-head QK-norm (scale shaped (d_head,)), fp32 math."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------------
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               has_head_dim: bool = True) -> jax.Array:
+    """x: (..., S, H, d_head) if has_head_dim else (..., S, d_head);
+    positions: (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (d/2,)
+    angles = positions[:, None].astype(jnp.float32) * freqs     # (S, d/2)
+    if has_head_dim:
+        angles = angles[:, None, :]                     # (S, 1, d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------------
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": dense_init(k1, d_model, d_ff, dtype),
+            "wg": dense_init(k2, d_model, d_ff, dtype),
+            "wo": dense_init(k3, d_ff, d_model, dtype)}
+
+
+def swiglu(p, x, compute_dtype=jnp.bfloat16):
+    h = jax.nn.silu(dense(p["wg"], x, compute_dtype)) * dense(p["wi"], x, compute_dtype)
+    return dense(p["wo"], h, compute_dtype)
+
+
+def geglu(p, x, compute_dtype=jnp.bfloat16):
+    """Gated-GELU MLP over swiglu-layout params (Gemma family)."""
+    h = jax.nn.gelu(dense(p["wg"], x, compute_dtype)) * dense(p["wi"], x, compute_dtype)
+    return dense(p["wo"], h, compute_dtype)
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {"wi": dense_init(k1, d_model, d_ff, dtype),
+            "wo": dense_init(k2, d_ff, d_model, dtype)}
+
+
+def gelu_mlp(p, x, compute_dtype=jnp.bfloat16):
+    return dense(p["wo"], jax.nn.gelu(dense(p["wi"], x, compute_dtype)),
+                 compute_dtype)
+
+
+# ----------------------------------------------------------------------------
+# Embedding / LM head
+# ----------------------------------------------------------------------------
+def embedding_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"table": default_kernel_init(key, (vocab, d_model), dtype)}
+
+
+def embed(p, tokens, compute_dtype=jnp.bfloat16):
+    return jnp.take(p["table"].astype(compute_dtype), tokens, axis=0)
+
+
+def unembed(p, x, compute_dtype=jnp.bfloat16):
+    """Tied head: logits = x @ tableᵀ (fp32 logits for a stable softmax)."""
+    return (x.astype(compute_dtype)
+            @ p["table"].astype(compute_dtype).T).astype(jnp.float32)

@@ -1,0 +1,603 @@
+"""Config-driven decoder LM: init / train forward / prefill / decode.
+
+Layer layout: the ``block_pattern`` tiles across ``n_layers``. Layers are
+split into
+    prefix  — first_k_dense MoE-exception layers (unrolled),
+    groups  — scan over stacked repeats of one pattern period (keeps the HLO
+              small: compile time and code size are O(pattern), not O(L)),
+    suffix  — the non-divisible remainder (unrolled).
+Params are plain nested dicts; stacked group leaves carry a leading repeat
+dim. Sharding is by logical axis names resolved per-path (PARAM_RULES).
+"""
+from __future__ import annotations
+
+import functools
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch.partition import aconstraint
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+
+
+# ---------------------------------------------------------------------------
+# config adapters
+# ---------------------------------------------------------------------------
+def attn_config(cfg: ArchConfig, kind: str) -> attn.AttnConfig:
+    return attn.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        d_head=cfg.d_head, rope_theta=cfg.rope_theta, qkv_bias=cfg.qkv_bias,
+        qk_norm=cfg.qk_norm,
+        window=cfg.window if kind == "local_attn" else 0,
+        q_block=cfg.q_block,
+        q_lora_rank=cfg.q_lora_rank, kv_lora_rank=cfg.kv_lora_rank,
+        qk_nope_head_dim=cfg.qk_nope_head_dim,
+        qk_rope_head_dim=cfg.qk_rope_head_dim, v_head_dim=cfg.v_head_dim,
+        rms_eps=cfg.rms_eps, kv_quant=cfg.kv_quant)
+
+
+def ssm_config(cfg: ArchConfig) -> ssm_lib.SSMConfig:
+    return ssm_lib.SSMConfig(d_model=cfg.d_model, d_state=cfg.ssm_state,
+                             expand=cfg.ssm_expand, headdim=cfg.ssm_headdim,
+                             chunk=cfg.ssm_chunk, conv_width=cfg.conv_width)
+
+
+def rglru_config(cfg: ArchConfig) -> ssm_lib.RGLRUConfig:
+    return ssm_lib.RGLRUConfig(d_model=cfg.d_model,
+                               lru_width=cfg.lru_width or cfg.d_model,
+                               conv_width=cfg.conv_width)
+
+
+def moe_config(cfg: ArchConfig) -> moe_lib.MoEConfig:
+    return moe_lib.MoEConfig(
+        d_model=cfg.d_model, n_experts=cfg.n_experts, top_k=cfg.top_k,
+        d_expert=cfg.d_expert, n_shared_experts=cfg.n_shared_experts,
+        normalize_topk=cfg.normalize_topk,
+        capacity_factor=cfg.capacity_factor)
+
+
+def _ffn_kind(cfg: ArchConfig, layer_idx: int, mixer_kind: str) -> str:
+    if mixer_kind == "ssd":
+        return "none"
+    if cfg.ffn == "moe":
+        return "dense" if layer_idx < cfg.first_k_dense else "moe"
+    return cfg.ffn  # swiglu | gelu
+
+
+def _layer_plan(cfg: ArchConfig):
+    """-> (prefix_idx, group_reps, suffix_idx). Groups start after prefix."""
+    kinds = cfg.layer_kinds
+    period = len(cfg.block_pattern)
+    prefix_n = cfg.first_k_dense if cfg.ffn == "moe" else 0
+    # align prefix up to a period boundary so groups are uniform
+    prefix_n = -(-prefix_n // period) * period if prefix_n else 0
+    rem = cfg.n_layers - prefix_n
+    reps = rem // period
+    suffix_n = rem - reps * period
+    prefix = list(range(prefix_n))
+    suffix = list(range(cfg.n_layers - suffix_n, cfg.n_layers))
+    return prefix, reps, suffix, kinds
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / forward / prefill / decode
+# ---------------------------------------------------------------------------
+def _layer_init(key, cfg: ArchConfig, kind: str, ffn_kind: str, dtype):
+    k1, k2 = jax.random.split(key)
+    p: dict[str, Any] = {"mixer_norm": L.rmsnorm_init(cfg.d_model, dtype)}
+    if kind in ("attn", "local_attn"):
+        p["mixer"] = attn.gqa_init(k1, attn_config(cfg, kind), dtype)
+    elif kind == "mla":
+        p["mixer"] = attn.mla_init(k1, attn_config(cfg, kind), dtype)
+    elif kind == "ssd":
+        p["mixer"] = ssm_lib.mamba2_init(k1, ssm_config(cfg), dtype)
+    elif kind == "rglru":
+        p["mixer"] = ssm_lib.rglru_block_init(k1, rglru_config(cfg), dtype)
+    else:
+        raise ValueError(kind)
+    if ffn_kind != "none":
+        p["ffn_norm"] = L.rmsnorm_init(cfg.d_model, dtype)
+        if ffn_kind == "moe":
+            p["ffn"] = moe_lib.moe_init(k2, moe_config(cfg), dtype)
+        elif ffn_kind == "dense":
+            p["ffn"] = L.swiglu_init(k2, cfg.d_model,
+                                     cfg.dense_d_ff or cfg.d_ff, dtype)
+        elif ffn_kind in ("swiglu", "geglu"):
+            p["ffn"] = L.swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype)
+        elif ffn_kind == "gelu":
+            p["ffn"] = L.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+        else:
+            raise ValueError(ffn_kind)
+    return p
+
+
+def _moe_dispatch(pf, h, moe_cfg):
+    """Pick the MoE implementation from the active partitioning rules:
+    'shard_map_ep' (explicit all-to-all expert parallelism, §Perf B3) when
+    an expert axis exists and the sequence divides it; else the
+    single-program gspmd_sort path."""
+    from repro.launch.partition import active_context
+    ctx = active_context()
+    if ctx is not None:
+        mesh, rules = ctx
+        expert_axes = rules.get("expert") or ()
+        expert_axes = ((expert_axes,) if isinstance(expert_axes, str)
+                       else tuple(expert_axes))
+        if (rules.get("moe_impl") == "shard_map_ep"
+                and len(expert_axes) == 1
+                and h.shape[1] % mesh.shape[expert_axes[0]] == 0):
+            from repro.models.moe_ep import moe_forward_ep
+            return moe_forward_ep(pf, h, moe_cfg, mesh, rules)
+    return moe_lib.moe_forward(pf, h, moe_cfg)
+
+
+def _ffn_apply(p, x, cfg: ArchConfig, ffn_kind: str):
+    aux = jnp.zeros((), jnp.float32)
+    if ffn_kind == "none":
+        return x, aux
+    h = L.rmsnorm(p["ffn_norm"], x, cfg.rms_eps)
+    if ffn_kind == "moe":
+        h, metrics = _moe_dispatch(p["ffn"], h, moe_config(cfg))
+        aux = metrics["moe_aux_total"]
+    elif ffn_kind == "gelu":
+        h = L.gelu_mlp(p["ffn"], h)
+    elif ffn_kind == "geglu":
+        h = L.geglu(p["ffn"], h)
+    else:
+        h = L.swiglu(p["ffn"], h)
+    return x + h, aux
+
+
+def _layer_forward(p, x, positions, cfg: ArchConfig, kind: str,
+                   ffn_kind: str):
+    h = L.rmsnorm(p["mixer_norm"], x, cfg.rms_eps)
+    if kind in ("attn", "local_attn"):
+        h = attn.gqa_forward(p["mixer"], h, positions, attn_config(cfg, kind))
+    elif kind == "mla":
+        h = attn.mla_forward(p["mixer"], h, positions, attn_config(cfg, kind))
+    elif kind == "ssd":
+        h = ssm_lib.mamba2_forward(p["mixer"], h, ssm_config(cfg))
+    elif kind == "rglru":
+        h = ssm_lib.rglru_block_forward(p["mixer"], h, rglru_config(cfg))
+    x = x + h
+    x = aconstraint(x, ("batch", "seq", "embed"))
+    return _ffn_apply(p, x, cfg, ffn_kind)
+
+
+def _layer_cache_init(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                      dtype):
+    if kind in ("attn", "local_attn"):
+        return attn.gqa_init_cache(batch, max_len, attn_config(cfg, kind),
+                                   dtype)
+    if kind == "mla":
+        return attn.mla_init_cache(batch, max_len, attn_config(cfg, kind),
+                                   dtype)
+    if kind == "ssd":
+        return ssm_lib.mamba2_init_state(batch, ssm_config(cfg))
+    if kind == "rglru":
+        return ssm_lib.rglru_init_state(batch, rglru_config(cfg))
+    raise ValueError(kind)
+
+
+def _layer_prefill(p, x, positions, cfg: ArchConfig, kind: str,
+                   ffn_kind: str, max_len: int):
+    h = L.rmsnorm(p["mixer_norm"], x, cfg.rms_eps)
+    if kind in ("attn", "local_attn"):
+        h, cache = attn.gqa_prefill_cache(p["mixer"], h, positions,
+                                          attn_config(cfg, kind), max_len)
+    elif kind == "mla":
+        h, cache = attn.mla_prefill_cache(p["mixer"], h, positions,
+                                          attn_config(cfg, kind), max_len)
+    elif kind == "ssd":
+        h, cache = ssm_lib.mamba2_forward(p["mixer"], h, ssm_config(cfg),
+                                          return_state=True)
+    elif kind == "rglru":
+        h, cache = ssm_lib.rglru_block_forward(p["mixer"], h,
+                                               rglru_config(cfg),
+                                               return_state=True)
+    x = x + h
+    x, aux = _ffn_apply(p, x, cfg, ffn_kind)
+    return x, aux, cache
+
+
+def _layer_decode(p, x, pos, cache, cfg: ArchConfig, kind: str,
+                  ffn_kind: str):
+    h = L.rmsnorm(p["mixer_norm"], x, cfg.rms_eps)
+    if kind in ("attn", "local_attn"):
+        h, cache = attn.gqa_decode_step(p["mixer"], h, pos, cache,
+                                        attn_config(cfg, kind))
+    elif kind == "mla":
+        h, cache = attn.mla_decode_step(p["mixer"], h, pos, cache,
+                                        attn_config(cfg, kind))
+    elif kind == "ssd":
+        h, cache = ssm_lib.mamba2_decode_step(p["mixer"], h, cache,
+                                              ssm_config(cfg))
+    elif kind == "rglru":
+        h, cache = ssm_lib.rglru_block_forward(p["mixer"], h,
+                                               rglru_config(cfg), state=cache,
+                                               return_state=True)
+    x = x + h
+    x, _ = _ffn_apply(p, x, cfg, ffn_kind)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# whole-model init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    prefix, reps, suffix, kinds = _layer_plan(cfg)
+    period = len(cfg.block_pattern)
+    keys = jax.random.split(key, 4)
+    params: dict[str, Any] = {}
+    if cfg.embed_inputs:
+        params["embed"] = L.embedding_init(keys[0], cfg.vocab_size,
+                                           cfg.d_model, dtype)
+    params["final_norm"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[1], cfg.d_model, cfg.vocab_size,
+                                         dtype)
+
+    def init_one(k, li):
+        kind = kinds[li]
+        return _layer_init(k, cfg, kind, _ffn_kind(cfg, li, kind), dtype)
+
+    if prefix:
+        pk = jax.random.split(keys[2], len(prefix))
+        params["prefix"] = {str(i): init_one(pk[i], li)
+                            for i, li in enumerate(prefix)}
+    if reps:
+        base = len(prefix)
+
+        def init_group(k):
+            gk = jax.random.split(k, period)
+            return {str(j): _layer_init(
+                gk[j], cfg, kinds[base + j],
+                _ffn_kind(cfg, base + j, kinds[base + j]), dtype)
+                for j in range(period)}
+
+        gkeys = jax.random.split(keys[3], reps)
+        params["groups"] = jax.vmap(init_group)(gkeys)
+    if suffix:
+        sk = jax.random.split(jax.random.fold_in(key, 99), len(suffix))
+        params["suffix"] = {str(i): init_one(sk[i], li)
+                            for i, li in enumerate(suffix)}
+    return params
+
+
+def init_abstract(cfg: ArchConfig, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree of params (no allocation) for the dry-run."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg=cfg, dtype=dtype),
+        jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# forward (train) — logits + aux losses
+# ---------------------------------------------------------------------------
+def _embed_in(params, cfg, tokens=None, embeds=None):
+    if cfg.embed_inputs:
+        assert tokens is not None
+        x = L.embed(params["embed"], tokens)
+    else:
+        assert embeds is not None
+        x = embeds.astype(jnp.bfloat16)
+    return aconstraint(x, ("batch", "seq", "embed"))
+
+
+def _head(params, cfg, x):
+    x = L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = L.dense(params["lm_head"], x).astype(jnp.float32)
+    if cfg.logit_soft_cap:
+        logits = cfg.logit_soft_cap * jnp.tanh(logits / cfg.logit_soft_cap)
+    return aconstraint(logits, ("batch", "seq", "vocab"))
+
+
+def forward(params, cfg: ArchConfig, tokens=None, embeds=None,
+            positions=None, remat: str = "none"):
+    """-> (logits (B,S,V) fp32, aux scalar)."""
+    prefix, reps, suffix, kinds = _layer_plan(cfg)
+    period = len(cfg.block_pattern)
+    x = _embed_in(params, cfg, tokens, embeds)
+    s = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    aux = jnp.zeros((), jnp.float32)
+
+    def apply_layer(p, x, li):
+        kind = kinds[li]
+        return _layer_forward(p, x, positions, cfg, kind,
+                              _ffn_kind(cfg, li, kind))
+
+    for i, li in enumerate(prefix):
+        x, a = apply_layer(params["prefix"][str(i)], x, li)
+        aux += a
+    if reps:
+        base = len(prefix)
+
+        def group_fn(x, gp):
+            a_tot = jnp.zeros((), jnp.float32)
+            for j in range(period):
+                x, a = _layer_forward(
+                    gp[str(j)], x, positions, cfg, kinds[base + j],
+                    _ffn_kind(cfg, base + j, kinds[base + j]))
+                a_tot += a
+            return x, a_tot
+
+        group_fn = _maybe_remat(group_fn, remat)
+
+        def scan_body(carry, gp):
+            x, aux = carry
+            x, a = group_fn(x, gp)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(scan_body, (x, aux), params["groups"])
+    for i, li in enumerate(suffix):
+        x, a = apply_layer(params["suffix"][str(i)], x, li)
+        aux += a
+    return _head(params, cfg, x), aux
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(remat)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, remat: str = "none"):
+    """batch: {"tokens"|"embeds", "labels", optional "mask"} -> (loss, metrics).
+
+    Cross-entropy is computed tensor-parallel-friendly: logits stay sharded
+    over the vocab axis; the label logit is extracted by a masked reduction
+    (fuses to a local select+sum, GSPMD adds a tiny psum) instead of
+    take_along_axis, which would force an all-gather of the full fp32
+    logits (~40 GB/device at 151936-vocab train shapes — observed before
+    this fix)."""
+    logits, aux = forward(params, cfg,
+                          tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"), remat=remat)
+    labels = batch["labels"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)          # (B,S)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    label_logit = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1)
+    nll = lse - label_logit
+    mask = batch.get("mask")
+    if mask is None:
+        loss = jnp.mean(nll)
+    else:
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + aux
+    return total, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    prefix, reps, suffix, kinds = _layer_plan(cfg)
+    period = len(cfg.block_pattern)
+    cache: dict[str, Any] = {}
+    if prefix:
+        cache["prefix"] = {str(i): _layer_cache_init(cfg, kinds[li], batch,
+                                                     max_len, dtype)
+                           for i, li in enumerate(prefix)}
+    if reps:
+        base = len(prefix)
+
+        def one_group():
+            return {str(j): _layer_cache_init(cfg, kinds[base + j], batch,
+                                              max_len, dtype)
+                    for j in range(period)}
+
+        cache["groups"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (reps,) + x.shape), one_group())
+    if suffix:
+        first = cfg.n_layers - len(suffix)
+        cache["suffix"] = {str(i): _layer_cache_init(cfg, kinds[first + i],
+                                                     batch, max_len, dtype)
+                           for i in range(len(suffix))}
+    return cache
+
+
+def prefill(params, cfg: ArchConfig, tokens=None, embeds=None,
+            max_len: int | None = None, remat: str = "none"):
+    """Run the prompt; -> (last-position logits (B,V), cache at len S)."""
+    prefix, reps, suffix, kinds = _layer_plan(cfg)
+    period = len(cfg.block_pattern)
+    x = _embed_in(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    max_len = max_len or s
+    positions = jnp.arange(s, dtype=jnp.int32)
+    caches: dict[str, Any] = {}
+
+    for i, li in enumerate(prefix):
+        x, _, c = _layer_prefill(params["prefix"][str(i)], x, positions, cfg,
+                                 kinds[li], _ffn_kind(cfg, li, kinds[li]),
+                                 max_len)
+        caches.setdefault("prefix", {})[str(i)] = c
+    if reps:
+        base = len(prefix)
+
+        def group_fn(x, gp):
+            cs = {}
+            for j in range(period):
+                x, _, c = _layer_prefill(
+                    gp[str(j)], x, positions, cfg, kinds[base + j],
+                    _ffn_kind(cfg, base + j, kinds[base + j]), max_len)
+                cs[str(j)] = c
+            return x, cs
+
+        group_fn = _maybe_remat(group_fn, remat)
+
+        def scan_body(x, gp):
+            return group_fn(x, gp)
+
+        x, gcaches = jax.lax.scan(scan_body, x, params["groups"])
+        caches["groups"] = gcaches
+    for i, li in enumerate(suffix):
+        x, _, c = _layer_prefill(params["suffix"][str(i)], x, positions, cfg,
+                                 kinds[li], _ffn_kind(cfg, li, kinds[li]),
+                                 max_len)
+        caches.setdefault("suffix", {})[str(i)] = c
+    logits = _head(params, cfg, x[:, -1:])[:, 0]
+    return logits, caches
+
+
+def decode_step(params, cfg: ArchConfig, pos, cache, token=None, embed=None):
+    """One token for the whole batch at absolute position ``pos`` (scalar).
+
+    token: (B,) int32 or embed: (B, D). -> (logits (B,V), new cache)."""
+    prefix, reps, suffix, kinds = _layer_plan(cfg)
+    period = len(cfg.block_pattern)
+    if cfg.embed_inputs:
+        x = L.embed(params["embed"], token[:, None])
+    else:
+        x = embed[:, None].astype(jnp.bfloat16)
+    pos = jnp.asarray(pos, jnp.int32)
+    new_cache: dict[str, Any] = {}
+
+    for i, li in enumerate(prefix):
+        x, c = _layer_decode(params["prefix"][str(i)], x, pos,
+                             cache["prefix"][str(i)], cfg, kinds[li],
+                             _ffn_kind(cfg, li, kinds[li]))
+        new_cache.setdefault("prefix", {})[str(i)] = c
+    if reps:
+        base = len(prefix)
+
+        def scan_body(x, gp_gc):
+            gp, gc = gp_gc
+            ncs = {}
+            for j in range(period):
+                x, c = _layer_decode(gp[str(j)], x, pos, gc[str(j)], cfg,
+                                     kinds[base + j],
+                                     _ffn_kind(cfg, base + j, kinds[base + j]))
+                ncs[str(j)] = c
+            return x, ncs
+
+        x, gcaches = jax.lax.scan(scan_body, x,
+                                  (params["groups"], cache["groups"]))
+        new_cache["groups"] = gcaches
+    for i, li in enumerate(suffix):
+        first = cfg.n_layers - len(suffix)
+        x, c = _layer_decode(params["suffix"][str(i)], x, pos,
+                             cache["suffix"][str(i)], cfg, kinds[first + i],
+                             _ffn_kind(cfg, first + i, kinds[first + i]))
+        new_cache.setdefault("suffix", {})[str(i)] = c
+    logits = _head(params, cfg, x)[:, 0]
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# logical sharding rules (path regex -> logical axis names per dim)
+# ---------------------------------------------------------------------------
+PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed/table$", ("vocab", "fsdp")),
+    (r"lm_head/kernel$", ("fsdp", "vocab")),
+    (r"mixer/wq/kernel$", ("fsdp", "heads")),
+    (r"mixer/w[kv]/kernel$", ("fsdp", "kv_heads")),
+    (r"mixer/wo/kernel$", ("heads", "fsdp")),
+    (r"mixer/wq/bias$", ("heads",)),
+    (r"mixer/w[kv]/bias$", ("kv_heads",)),
+    (r"mixer/wdq/kernel$", ("fsdp", None)),
+    (r"mixer/wuq/kernel$", (None, "heads")),
+    (r"mixer/wdkv/kernel$", ("fsdp", None)),
+    (r"mixer/wu[kv]/kernel$", (None, "heads")),
+    (r"ffn/w[ig]/kernel$", ("fsdp", "mlp")),
+    (r"ffn/wo/kernel$", ("mlp", "fsdp")),
+    (r"ffn/shared/w[ig]/kernel$", ("fsdp", "mlp")),
+    (r"ffn/shared/wo/kernel$", ("mlp", "fsdp")),
+    (r"ffn/router/kernel$", ("fsdp", None)),
+    (r"ffn/wi$", ("expert", "fsdp", "expert_mlp")),
+    (r"ffn/wg$", ("expert", "fsdp", "expert_mlp")),
+    (r"ffn/wo$", ("expert", "expert_mlp", "fsdp")),
+    (r"mixer/in_proj/kernel$", ("fsdp", "mlp")),
+    (r"mixer/out_proj/kernel$", ("mlp", "fsdp")),
+    (r"mixer/w_gate/kernel$", ("fsdp", "mlp")),
+    (r"mixer/w_rec_in/kernel$", ("fsdp", "mlp")),
+    (r"mixer/w_[ai]/kernel$", (None, "mlp")),
+    (r"mixer/w_[ai]/bias$", ("mlp",)),
+    (r"mixer/w_out/kernel$", ("mlp", "fsdp")),
+    (r"mixer/conv_w$", (None, "mlp")),
+    (r"mixer/conv_b$", ("mlp",)),
+    (r"mixer/lambda$", ("mlp",)),
+    (r"mixer/(A_log|D|dt_bias)$", (None,)),
+    (r".*(norm.*/scale|q_norm|k_norm)$", (None,)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def param_logical_axes(params_or_abstract):
+    """Pytree of logical-name tuples parallel to params. Stacked group leaves
+    get a leading None for the repeat dim."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_or_abstract)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        names = None
+        for pat, nm in PARAM_RULES:
+            if re.search(pat, ps):
+                names = nm
+                break
+        ndim = len(leaf.shape)
+        if names is None:
+            names = (None,) * ndim
+        if ps.startswith("groups/"):
+            names = (None,) + tuple(names)
+        names = tuple(names)[:ndim] + (None,) * max(0, ndim - len(names))
+        out.append(names)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def cache_logical_axes(cache):
+    """Batch dim -> ("batch",); kv-head dim of attention caches -> model."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        ndim = len(leaf.shape)
+        stacked = ps.startswith("groups/")
+        core = ndim - (1 if stacked else 0)
+        if ps.endswith("/pos"):
+            names: tuple = (None,) * core
+        elif ps.endswith("/k") or ps.endswith("/v"):
+            # kv_heads first; when it cannot shard (kv < TP), the sequence
+            # dim picks up the model axis instead (axis dedupe in
+            # param_sharding keeps them mutually exclusive)
+            names = ("batch", "kv_seq", "kv_heads", None)[:core]
+        elif ps.endswith("_scale"):
+            names = ("batch", "kv_seq", "kv_heads")[:core]
+        elif ps.endswith("/c") or ps.endswith("/k_rope"):
+            names = ("batch", "kv_seq", None)[:core]
+        else:  # ssm/conv states
+            names = ("batch",) + (None,) * (core - 1)
+        if stacked:
+            names = (None,) + names
+        out.append(names)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,149 @@
+"""Mixture-of-Experts FFN: fine-grained routed experts + shared experts.
+
+Covers both assigned MoE archs:
+  * deepseek-moe-16b — 64 routed (top-6) + 2 shared experts, softmax→top-k
+    router without weight renormalisation (DeepSeekMoE, arXiv:2401.06066).
+  * qwen3-moe-235b-a22b — 128 routed (top-8), no shared, renormalised top-k.
+
+Dispatch is sort-based with a static per-expert capacity (GShard-style drop
+semantics, MegaBlocks-style grouped layout): tokens are sorted by assigned
+expert, packed into an (E, C, d) buffer, processed by a batched expert
+SwiGLU (one einsum — MXU), and scattered back with router weights. Dropped
+tokens (beyond capacity) pass through with zero expert contribution — their
+residual stream is untouched, matching standard capacity-drop behaviour.
+
+Sharding intent (launch/partition.py): the expert dim of expert weights maps
+to the ``model`` mesh axis (expert parallelism); the (E, C, d) buffer then
+shards on E and GSPMD inserts the token all-to-all. An alternative
+expert-tensor-parallel layout (shard d_expert) is expressible by remapping
+one logical axis — compared in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    normalize_topk: bool = False      # True for qwen3
+    aux_loss_coef: float = 0.001
+    z_loss_coef: float = 0.001
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_expert
+    init = L.default_kernel_init
+    p = {
+        "router": {"kernel": init(ks[0], (d, e), jnp.float32)},
+        "wi": init(ks[1], (e, d, f), dtype),
+        "wg": init(ks[2], (e, d, f), dtype),
+        "wo": init(ks[3], (e, f, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.swiglu_init(ks[4], d, cfg.n_shared_experts * f, dtype)
+    return p
+
+
+def route(logits: jax.Array, cfg: MoEConfig):
+    """logits (T,E) fp32 -> (weights (T,k), idx (T,k), aux_metrics)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.normalize_topk:
+        weights = weights / jnp.maximum(
+            jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss + router z-loss.
+    e = cfg.n_experts
+    me = jnp.mean(probs, axis=0)                                  # (E,)
+    assigned = jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(1)   # (T,E)
+    fe = jnp.mean(assigned, axis=0) / cfg.top_k
+    aux = e * jnp.sum(fe * me)
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return weights, idx, {"load_balance_loss": aux, "router_z_loss": z}
+
+
+def capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU sublane alignment
+
+
+def expert_mlp(p, buf: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    """buf: (E, C, d) -> (E, C, d), batched SwiGLU over the expert dim."""
+    xb = buf.astype(compute_dtype)
+    wi = p["wi"].astype(compute_dtype)
+    wg = p["wg"].astype(compute_dtype)
+    wo = p["wo"].astype(compute_dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xb, wg)) * \
+        jnp.einsum("ecd,edf->ecf", xb, wi)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def moe_forward(p, x: jax.Array, cfg: MoEConfig):
+    """x: (B,S,D) -> (out (B,S,D), metrics)."""
+    b, s, d = x.shape
+    t = b * s
+    k, e = cfg.top_k, cfg.n_experts
+    c = capacity(t, cfg)
+    flat = x.reshape(t, d)
+    logits = (flat.astype(jnp.float32)
+              @ p["router"]["kernel"].astype(jnp.float32))
+    weights, idx, metrics = route(logits, cfg)
+
+    pair_e = idx.reshape(t * k)                          # expert of each pair
+    pair_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    pair_w = weights.reshape(t * k)
+    order = jnp.argsort(pair_e)                          # stable
+    se, st_tok, sw = pair_e[order], pair_t[order], pair_w[order]
+    counts = jnp.bincount(pair_e, length=e)              # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    keep = pos < c
+    slot = jnp.where(keep, se * c + pos, e * c)          # overflow -> trash row
+    buf = jnp.zeros((e * c + 1, d), x.dtype).at[slot].set(flat[st_tok])
+    # NOTE (§Perf B2, refuted): forcing expert/token sharding constraints on
+    # buf/flat here makes GSPMD's resolution *worse* (123 s vs 28 s
+    # collective on deepseek train). This single-program path is the
+    # fallback for shapes the explicit-EP path can't take (1-token decode);
+    # production MoE runs via moe_ep.moe_forward_ep (rules: moe_impl).
+    h = expert_mlp(p, buf[:e * c].reshape(e, c, d))      # (E,C,d)
+    rows = h.reshape(e * c, d)[jnp.where(keep, se * c + pos, 0)]
+    rows = rows * (sw * keep).astype(rows.dtype)[:, None]
+    out = jnp.zeros((t, d), rows.dtype).at[st_tok].add(rows)
+    if cfg.n_shared_experts:
+        out = out + L.swiglu(p["shared"], flat)
+    metrics["dropped_frac"] = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    metrics["moe_aux_total"] = (cfg.aux_loss_coef * metrics["load_balance_loss"]
+                                + cfg.z_loss_coef * metrics["router_z_loss"])
+    return out.reshape(b, s, d), metrics
+
+
+def moe_forward_dense(p, x: jax.Array, cfg: MoEConfig):
+    """Exact dense reference (every expert computes every token) — O(E·T·d·f);
+    for parity tests on small configs only."""
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    logits = (flat.astype(jnp.float32)
+              @ p["router"]["kernel"].astype(jnp.float32))
+    weights, idx, metrics = route(logits, cfg)
+    # combine weights (T, E): sum of top-k weights landing on each expert
+    comb = jnp.zeros_like(logits)
+    comb = comb.at[jnp.arange(flat.shape[0])[:, None], idx].add(weights)
+    xb = flat.astype(jnp.bfloat16)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xb, p["wg"].astype(jnp.bfloat16)))
+    h = h * jnp.einsum("td,edf->tef", xb, p["wi"].astype(jnp.bfloat16))
+    y = jnp.einsum("tef,efd->ted", h, p["wo"].astype(jnp.bfloat16))
+    out = jnp.einsum("ted,te->td", y.astype(jnp.float32), comb)
+    if cfg.n_shared_experts:
+        out = out + L.swiglu(p["shared"], flat).astype(jnp.float32)
+    return out.astype(x.dtype).reshape(b, s, d), metrics

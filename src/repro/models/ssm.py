@@ -1,0 +1,317 @@
+"""State-space mixers: Mamba-2 (SSD, chunked) and Griffin's RG-LRU.
+
+Mamba-2 / SSD (arXiv:2405.21060): the chunked "state-space duality"
+algorithm — intra-chunk quadratic (attention-like, MXU-friendly) +
+inter-chunk linear recurrence over chunk states. Matches the naive
+sequential recurrence exactly (tests/test_ssm.py) while exposing matmul
+parallelism; chunk size is the TPU analogue of the paper's block tiling.
+
+RG-LRU (Griffin, arXiv:2402.19427): gated linear recurrence
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t),
+    a_t = exp(-c · softplus(Λ) · r_t)
+computed with an associative scan over the sequence (log-depth on TPU).
+
+Both provide O(1)-state decode steps — this is why the `long_500k` cell is
+runnable for these families only.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    expand: int = 2
+    headdim: int = 64
+    chunk: int = 256
+    conv_width: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+
+def mamba2_init(key, cfg: SSMConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    d_in = cfg.d_inner
+    conv_dim = d_in + 2 * cfg.d_state
+    return {
+        # fused input projection: [z | x | B | C | dt]
+        "in_proj": L.dense_init(ks[0], cfg.d_model,
+                                2 * d_in + 2 * cfg.d_state + cfg.n_heads,
+                                dtype),
+        "conv_w": jax.nn.initializers.normal(0.1)(
+            ks[1], (cfg.conv_width, conv_dim), dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, cfg.n_heads + 1, dtype=dtype)),
+        "D": jnp.ones((cfg.n_heads,), dtype),
+        "dt_bias": jnp.zeros((cfg.n_heads,), dtype),
+        "norm": L.rmsnorm_init(d_in, dtype),
+        "out_proj": L.dense_init(ks[3], d_in, cfg.d_model, dtype),
+    }
+
+
+def _split_proj(p, u, cfg: SSMConfig):
+    d_in, ds, nh = cfg.d_inner, cfg.d_state, cfg.n_heads
+    zxbcdt = L.dense(p["in_proj"], u)
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + d_in + 2 * ds]
+    dt = zxbcdt[..., -nh:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b, state=None):
+    """Depthwise causal conv1d, width W. xBC: (B,S,C); conv_w: (W,C).
+
+    If ``state`` ((B, W-1, C), previous inputs) is given, runs in streaming
+    mode and returns (out, new_state)."""
+    w = conv_w.shape[0]
+    if state is not None:
+        ctx = jnp.concatenate([state.astype(xBC.dtype), xBC], axis=1)
+        new_state = ctx[:, -(w - 1):]
+    else:
+        ctx = jnp.pad(xBC, ((0, 0), (w - 1, 0), (0, 0)))
+        new_state = ctx[:, -(w - 1):]
+    out = sum(ctx[:, i:i + xBC.shape[1]] * conv_w[i].astype(xBC.dtype)
+              for i in range(w))
+    out = jax.nn.silu(out + conv_b.astype(xBC.dtype))
+    return out, new_state
+
+
+def _segsum(x):
+    """x: (..., Q) log-decays -> (..., Q, Q) lower-triangular cumulative sums:
+    out[i,j] = sum_{k=j+1..i} x[k] for i >= j, -inf otherwise."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """SSD forward. Shapes: x (b,s,h,p); dt (b,s,h) [post-softplus];
+    A (h,) [negative]; Bm, Cm (b,s,n). Returns (y (b,s,h,p), final_state
+    (b,h,p,n))."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    # dt-scaled input & per-step log decay
+    xd = x * dt[..., None]                                 # (b,s,h,p)
+    dA = dt * A[None, None, :]                             # (b,s,h) log-decay
+    # chunk views
+    xc = xd.reshape(b, nc, chunk, h, p)
+    dAc = dA.reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, n)
+    Cc = Cm.reshape(b, nc, chunk, n)
+    dA_cs = jnp.cumsum(dAc, axis=2)                        # (b,nc,Q,h)
+
+    # 1) intra-chunk (quadratic, MXU): Y_diag[l] = Σ_{s<=l} C_l·B_s decay x_s
+    Lmat = jnp.exp(_segsum(dAc.transpose(0, 1, 3, 2)))     # (b,nc,h,Q,Q)
+    CB = jnp.einsum("bcln,bcsn->bcls", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))                # (b,nc,Q,Q)
+    W = Lmat * CB[:, :, None]                              # (b,nc,h,Q,Q)
+    Y_diag = jnp.einsum("bchls,bcshp->bclhp", W, xc.astype(jnp.float32))
+
+    # 2) per-chunk output states: contribution of this chunk to the carried
+    # state: states[c] = Σ_l B_l ⊗ x_l · exp(dA_sum - dA_cs[l])
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)    # (b,nc,Q,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn",
+                        Bc.astype(jnp.float32), decay_states,
+                        xc.astype(jnp.float32))            # (b,nc,h,p,n)
+
+    # 3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])              # (b,nc,h)
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp                                       # (b,h,p,n),(b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                   # emit state *before* chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step, init, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                # (b,nc,h,p,n)
+
+    # 4) state -> output within chunk: Y_off[l] = C_l · prev_state · exp(dA_cs[l])
+    state_decay = jnp.exp(dA_cs)                            # (b,nc,Q,h)
+    Y_off = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                       Cc.astype(jnp.float32), prev_states, state_decay)
+
+    y = (Y_diag + Y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def mamba2_forward(p, u, cfg: SSMConfig, initial_state=None,
+                   conv_state=None, return_state: bool = False):
+    """u: (B,S,D) -> (B,S,D). Optionally returns (out, (conv_state, ssm_state))."""
+    b, s, _ = u.shape
+    d_in, ds, nh, hp = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.headdim
+    z, xBC, dt = _split_proj(p, u, cfg)
+    xBC, new_conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    x = xBC[..., :d_in].reshape(b, s, nh, hp)
+    Bm = xBC[..., d_in:d_in + ds]
+    Cm = xBC[..., d_in + ds:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    # Pad S up to a chunk multiple with dt=0 no-op steps: dA=exp(0)=1 keeps
+    # the carried state untouched and x̄=x·dt=0 injects nothing, so outputs
+    # and final_state are exact.
+    pad = (-s) % cfg.chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, final_state = ssd_chunked(x, dt, A, Bm, Cm, cfg.chunk, initial_state)
+    if pad:
+        y = y[:, :s]
+        x = x[:, :s]
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * x
+    y = y.reshape(b, s, d_in)
+    # gated RMSNorm (Mamba-2): norm(y * silu(z))
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = L.dense(p["out_proj"], y)
+    if return_state:
+        return out, (new_conv_state, final_state)
+    return out
+
+
+def mamba2_init_state(batch: int, cfg: SSMConfig, dtype=jnp.float32):
+    conv_dim = cfg.d_inner + 2 * cfg.d_state
+    return (jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+            jnp.zeros((batch, cfg.n_heads, cfg.headdim, cfg.d_state), dtype))
+
+
+def mamba2_decode_step(p, u, state, cfg: SSMConfig):
+    """u: (B,1,D); state from mamba2_init_state. O(1) per token."""
+    conv_state, h = state
+    b = u.shape[0]
+    d_in, ds, nh, hp = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.headdim
+    z, xBC, dt = _split_proj(p, u, cfg)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    x = xBC[:, 0, :d_in].reshape(b, nh, hp)
+    Bm = xBC[:, 0, d_in:d_in + ds]
+    Cm = xBC[:, 0, d_in + ds:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))   # (B,h)
+    dA = jnp.exp(dt1 * A[None, :])                              # (B,h)
+    # h' = h * dA + dt·x ⊗ B
+    xd = x.astype(jnp.float32) * dt1[..., None]
+    h = h.astype(jnp.float32) * dA[..., None, None] + \
+        jnp.einsum("bhp,bn->bhpn", xd, Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, 1, d_in).astype(u.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return L.dense(p["out_proj"], y), (conv_state, h)
+
+
+def ssd_naive(x, dt, A, Bm, Cm, initial_state=None):
+    """Sequential reference recurrence for tests: O(S) scan over tokens."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+
+    def step(hstate, inp):
+        xt, dtt, Bt, Ct = inp
+        dA = jnp.exp(dtt * A[None, :])                     # (b,h)
+        hstate = hstate * dA[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xt.astype(jnp.float32) * dtt[..., None],
+            Bt.astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", hstate, Ct.astype(jnp.float32))
+        return hstate, y
+
+    final, ys = jax.lax.scan(
+        step, init, (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+                     Bm.swapaxes(0, 1), Cm.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / recurrentgemma)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    lru_width: int
+    conv_width: int = 4
+    c: float = 8.0
+
+
+def rglru_block_init(key, cfg: RGLRUConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    w = cfg.lru_width
+    # Λ init so that a ∈ (0.9, 0.999) at r=1 (Griffin appendix)
+    u = jax.random.uniform(ks[4], (w,), dtype, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * cfg.c))).astype(dtype)
+    return {
+        "w_gate": L.dense_init(ks[0], cfg.d_model, w, dtype),
+        "w_rec_in": L.dense_init(ks[1], cfg.d_model, w, dtype),
+        "conv_w": jax.nn.initializers.normal(0.1)(ks[2], (cfg.conv_width, w),
+                                                  dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": L.dense_init(ks[3], w, w, dtype, bias=True),
+        "w_i": L.dense_init(ks[5], w, w, dtype, bias=True),
+        "lambda": lam,
+        "w_out": L.dense_init(jax.random.fold_in(key, 7), w, cfg.d_model,
+                              dtype),
+    }
+
+
+def _rglru_core(p, x, cfg: RGLRUConfig, h0=None):
+    """x: (B,S,W) post-conv activations. Returns (h_seq, h_last)."""
+    r = jax.nn.sigmoid(L.dense(p["w_a"], x, jnp.float32))
+    i = jax.nn.sigmoid(L.dense(p["w_i"], x, jnp.float32))
+    log_a = -cfg.c * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_x = x.astype(jnp.float32) * i
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    a_scan, b_scan = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = b_scan if h0 is None else b_scan + a_scan * h0[:, None, :]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_block_forward(p, u, cfg: RGLRUConfig, state=None,
+                        return_state: bool = False):
+    """Griffin recurrent block: gate ⊙ RG-LRU(conv(W_in u)), then W_out.
+
+    state: (conv_state (B,W-1,w), h (B,w)) or None."""
+    conv_state, h0 = state if state is not None else (None, None)
+    gate = jax.nn.gelu(L.dense(p["w_gate"], u))
+    rec = L.dense(p["w_rec_in"], u)
+    rec, new_conv_state = _causal_conv(rec, p["conv_w"], p["conv_b"], conv_state)
+    h, h_last = _rglru_core(p, rec, cfg, h0)
+    out = L.dense(p["w_out"], gate * h)
+    if return_state:
+        return out, (new_conv_state, h_last.astype(jnp.float32))
+    return out
+
+
+def rglru_init_state(batch: int, cfg: RGLRUConfig, dtype=jnp.float32):
+    return (jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+            jnp.zeros((batch, cfg.lru_width), jnp.float32))

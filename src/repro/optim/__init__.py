@@ -1,0 +1,7 @@
+"""Sharded optimizers + schedules (pure JAX, no optax dependency)."""
+from repro.optim.optimizers import (OptState, Optimizer, adafactor, adamw,
+                                    clip_by_global_norm, pick_optimizer)
+from repro.optim.schedule import cosine_schedule
+
+__all__ = ["Optimizer", "OptState", "adamw", "adafactor", "pick_optimizer",
+           "clip_by_global_norm", "cosine_schedule"]

@@ -1,0 +1,161 @@
+"""AdamW and Adafactor, shard-friendly pure-JAX implementations.
+
+Optimizer states are pytrees mirroring the params tree, so the same
+NamedShardings apply (launch/partition). Adafactor keeps factored second
+moments — O(m+n) per (m,n) matrix instead of O(mn) — which is what lets the
+405B/235B configs hold optimizer state inside the v5e HBM budget
+(EXPERIMENTS.md §Dry-run memory table); this is a standard production trick
+(T5/PaLM trained with it), not an approximation we invented.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], tuple[Any, OptState]]
+    name: str = ""
+
+    def state_logical_axes(self, param_axes):
+        """Optimizer-state logical axes mirroring param axes."""
+        return self._axes_fn(param_axes)  # type: ignore[attr-defined]
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        inner={"m": jax.tree_util.tree_map(zeros, params),
+                               "v": jax.tree_util.tree_map(zeros, params)})
+
+    def update(grads, state: OptState, params):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr = lr_fn(step)
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / b1c
+            vh = v / b2c
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p - lr * delta).astype(p.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, grads, state.inner["m"],
+                                     state.inner["v"], params)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                            is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, OptState(step=step, inner={"m": new_m, "v": new_v})
+
+    opt = Optimizer(init=init, update=update, name="adamw")
+    object.__setattr__(opt, "_axes_fn", lambda param_axes: OptState(
+        step=(), inner={"m": param_axes, "v": param_axes}))
+    return opt
+
+
+def adafactor(lr_fn, decay: float = 0.99, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0,
+              clip_norm: float = 1.0) -> Optimizer:
+    """Factored-second-moment Adafactor (Shazeer & Stern, 2018), no momentum.
+
+    For ndim>=2 leaves: row/col running means of g² over the last two dims
+    (leading stack dims kept). For vectors/scalars: full second moment.
+    """
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        inner=jax.tree_util.tree_map(one, params))
+
+    def update(grads, state: OptState, params):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr = lr_fn(step)
+        # bias-corrected decay (Adafactor's \hat{\beta}_t)
+        t = step.astype(jnp.float32)
+        beta = jnp.minimum(decay, 1.0 - t ** -0.8)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rms_row = vr / jnp.mean(vr, axis=-1, keepdims=True)
+                denom = jnp.sqrt(rms_row[..., None] * vc[..., None, :])
+                u = g / jnp.maximum(denom, 1e-30)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(v)
+                new_s = {"v": v}
+            # update clipping by RMS
+            urms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, urms / clip_threshold)
+            delta = u + weight_decay * p.astype(jnp.float32)
+            return (p - lr * delta).astype(p.dtype), new_s
+
+        # tree_map recurses over grads' structure; the matching state.inner
+        # subtree ({"vr","vc"} or {"v"}) arrives whole at each grad leaf.
+        out = jax.tree_util.tree_map(upd, grads, state.inner, params)
+        is_pair = lambda t: isinstance(t, tuple) and len(t) == 2
+        new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is_pair)
+        new_inner = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is_pair)
+        return new_params, OptState(step=step, inner=new_inner)
+
+    opt = Optimizer(init=init, update=update, name="adafactor")
+
+    def axes_fn(param_axes):
+        def one(names):
+            names = tuple(names)
+            if len(names) >= 2:
+                return {"vr": names[:-1], "vc": names[:-2] + names[-1:]}
+            return {"v": names}
+        inner = jax.tree_util.tree_map(
+            one, param_axes,
+            is_leaf=lambda t: isinstance(t, tuple) and all(
+                isinstance(e, (str, type(None))) for e in t))
+        return OptState(step=(), inner=inner)
+
+    object.__setattr__(opt, "_axes_fn", axes_fn)
+    return opt
+
+
+def pick_optimizer(total_params: int, lr_fn) -> Optimizer:
+    """Production default: AdamW below 100B total params, Adafactor above
+    (fp32 m+v for 405B/235B would blow the v5e HBM budget)."""
+    if total_params >= 100e9:
+        return adafactor(lr_fn)
+    return adamw(lr_fn)

@@ -1,0 +1,5 @@
+"""Roofline analysis from compiled HLO (dry-run artifacts)."""
+from repro.roofline.hlo_analysis import HLOCostModel, analyze_hlo
+from repro.roofline.report import roofline_terms, V5E
+
+__all__ = ["analyze_hlo", "HLOCostModel", "roofline_terms", "V5E"]

@@ -1,0 +1,412 @@
+"""While-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts each while/scan body ONCE (verified
+empirically — a 10-iteration scan of a matmul reports the flops of one
+matmul). Our models scan over layer groups, so naive cost_analysis
+undercounts a 126-layer model by ~40x. This module parses the post-SPMD
+HLO text (``compiled.as_text()``, the per-device module) and computes:
+
+  * FLOPs — dots exactly (2 * result_elems * contraction_size), elementwise
+    ops at 1 flop/elem (transcendentals 8), reductions at 1/input-elem,
+    sorts at n·log n — recursively through fusions/calls, with while bodies
+    multiplied by their ``known_trip_count`` backend_config (emitted by XLA
+    for lax.scan / fori_loop; missing counts default to 1 and are flagged),
+  * an HBM-traffic model — operand + result bytes at *fusion boundaries*
+    (buffers internal to a fusion never touch HBM); parameters / tuple
+    plumbing / constants excluded,
+  * collective bytes per kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute, sync and -start async forms): operand
+    bytes summed (the spec'd convention), loop-multiplied.
+
+All numbers are per-device (the module is post-SPMD-partitioning).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_EW1 = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+        "compare", "select", "and", "or", "xor", "negate", "abs", "floor",
+        "ceil", "round-nearest-afz", "clamp", "sign", "iota", "convert"}
+_EWT = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power", "logistic",
+        "sine", "cosine", "expm1", "log1p", "atan2", "erf", "cbrt",
+        "exponential-minus-one"}
+
+# plumbing that moves no HBM bytes of its own
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "call", "after-all",
+               "partition-id", "replica-id"}
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    bytes: float
+    elems: float
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: Dict[str, Instruction]
+    order: List[str]
+
+
+def _shape_bytes_elems(type_str: str) -> tuple[float, float]:
+    """'f32[256,12]{1,0}' or '(s32[], f32[4]{0})' -> (bytes, elems)."""
+    total_b, total_e = 0.0, 0.0
+    for m in re.finditer(r"([a-z0-9]+)\[([\d,]*)\]", type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        elems = 1.0
+        for d in dims.split(","):
+            if d:
+                elems *= int(d)
+        total_b += _DTYPE_BYTES[dt] * elems
+        total_e += elems
+    return total_b, total_e
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[a-z0-9].*?(?:\{[\d,]*\})?\)?)\s+"
+    r"([\w\-]+)\((.*)$")
+
+
+def _parse_computations(hlo: str) -> tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        header = re.match(r"^(ENTRY\s+)?%([\w.\-]+)\s*\((.*)\)\s*->", line)
+        if header and line.rstrip().endswith("{"):
+            cur = Computation(name=header.group(2), instructions={}, order=[])
+            comps[cur.name] = cur
+            if header.group(1):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        # operand segment ends at the matching ')' of the call parens
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = re.findall(r"%([\w.\-]+)", rest[:end])
+        attrs = rest[end + 1:]
+        b, e = _shape_bytes_elems(type_str)
+        ins = Instruction(name=name, type_str=type_str, opcode=opcode,
+                          operands=operands, attrs=attrs, bytes=b, elems=e)
+        cur.instructions[name] = ins
+        cur.order.append(name)
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return comps, entry or ""
+
+
+def _dot_flops(ins: Instruction, comp: Computation) -> float:
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    lhs = comp.instructions.get(ins.operands[0]) if ins.operands else None
+    if m is None or lhs is None:
+        return 2.0 * ins.elems
+    dims_m = re.search(r"\[([\d,]*)\]", lhs.type_str)
+    if not dims_m:
+        return 2.0 * ins.elems
+    lhs_dims = [int(d) for d in dims_m.group(1).split(",") if d]
+    csize = 1.0
+    for d in m.group(1).split(","):
+        if d and int(d) < len(lhs_dims):
+            csize *= lhs_dims[int(d)]
+    return 2.0 * ins.elems * csize
+
+
+def _trip_count(ins: Instruction):
+    m = re.search(r'known_trip_count[":{\s]+n[":\s]+"?(\d+)', ins.attrs)
+    return float(m.group(1)) if m else None
+
+
+def _called(ins: Instruction) -> list[str]:
+    out = []
+    for key in ("calls", "to_apply", "condition", "body",
+                "true_computation", "false_computation"):
+        m = re.search(key + r"=%([\w.\-]+)", ins.attrs)
+        if m:
+            out.append(m.group(1))
+    m = re.search(r"branch_computations=\{([^}]*)\}", ins.attrs)
+    if m:
+        out.extend(re.findall(r"%([\w.\-]+)", m.group(1)))
+    return out
+
+
+def _fusion_param_read_bytes(comps, called_name: str, param_idx: int,
+                             full_bytes: float) -> float:
+    """Bytes a fusion actually reads from operand ``param_idx``.
+
+    XLA fuses (dynamic-)slice ops into kLoop fusions; when a fusion
+    parameter is consumed only through slices, the fusion touches
+    slice-sized data, not the whole buffer (measured 126x overcount on
+    llama3's scan-saved activation stack before this fix)."""
+    body = comps.get(called_name)
+    if body is None:
+        return full_bytes
+    # parameters are named param_N (or positional by appearance order)
+    params = [body.instructions[n] for n in body.order
+              if body.instructions[n].opcode == "parameter"]
+    target = None
+    for p in params:
+        m = re.match(r"param_(\d+)", p.name)  # param_0, param_0.1, ...
+        idx = int(m.group(1)) if m else params.index(p)
+        if idx == param_idx:
+            target = p
+            break
+    if target is None and param_idx < len(params):
+        target = params[param_idx]
+    if target is None:
+        return full_bytes
+    consumers = [body.instructions[n] for n in body.order
+                 if target.name in body.instructions[n].operands]
+    if not consumers:
+        return 0.0
+    if all(c.opcode in ("dynamic-slice", "slice") for c in consumers):
+        return sum(c.bytes for c in consumers)
+    return full_bytes
+
+
+def _instr_traffic(ins: Instruction, comp: Computation, virtual: set,
+                   read_memo: dict, comps=None) -> float:
+    """HBM bytes moved by one instruction execution.
+
+    Slicing/scatter ops only touch the slice/update region, not the whole
+    buffer (in-place on TPU): counting full operands overestimated scan-xs
+    saving by ~100x (observed on the MoE cell before this fix)."""
+    if ins.opcode == "dynamic-update-slice":
+        upd = (comp.instructions.get(ins.operands[1])
+               if len(ins.operands) > 1 else None)
+        return 2.0 * upd.bytes if upd is not None else ins.bytes
+    if ins.opcode in ("dynamic-slice", "gather"):
+        return 2.0 * ins.bytes  # read the touched region + write result
+    if ins.opcode in ("scatter", "scatter-add", "select-and-scatter"):
+        upd = (comp.instructions.get(ins.operands[2])
+               if len(ins.operands) > 2 else None)
+        return 2.0 * upd.bytes if upd is not None else ins.bytes
+    b = ins.bytes  # write
+    called = _called(ins) if (ins.opcode == "fusion" and comps) else []
+    for i, o in enumerate(ins.operands):
+        rb = _resolve_reads(comp, virtual, o, read_memo)
+        if called and rb > 0:
+            rb = min(rb, _fusion_param_read_bytes(comps, called[0], i, rb))
+        b += rb
+    return b
+
+
+@dataclasses.dataclass
+class HLOCostModel:
+    flops: float = 0.0
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_detail: dict = dataclasses.field(default_factory=dict)
+    unknown_trip_whiles: int = 0
+    # Full-carry-buffer ops inside loop bodies (per-execution traffic above
+    # _LOOP_ARTIFACT_THRESHOLD). The CPU backend sometimes schedules e.g. a
+    # whole-scan-stack convert inside the layer loop — 190 GB/iteration ops
+    # a TPU compile does not emit. Reported separately so the memory term
+    # can be read with and without them (llama3-405b §Perf C4).
+    loop_artifact_bytes: float = 0.0
+
+    @property
+    def hbm_bytes_corrected(self) -> float:
+        return self.hbm_bytes - self.loop_artifact_bytes
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hbm_bytes_corrected"] = self.hbm_bytes_corrected
+        return d
+
+
+_LOOP_ARTIFACT_THRESHOLD = 10e9  # bytes per single execution
+
+
+@dataclasses.dataclass
+class _Cost:
+    fl: float = 0.0
+    dfl: float = 0.0
+    hb: float = 0.0
+    cb: float = 0.0
+    art: float = 0.0          # loop-artifact bytes (subset of hb)
+    coll: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "_Cost", mult: float = 1.0, include_hb: bool = True):
+        self.fl += mult * other.fl
+        self.dfl += mult * other.dfl
+        if include_hb:
+            self.hb += mult * other.hb
+            self.art += mult * other.art
+        self.cb += mult * other.cb
+        for k, v in other.coll.items():
+            slot = self.coll.setdefault(k, {"count": 0.0, "bytes": 0.0})
+            slot["count"] += mult * v["count"]
+            slot["bytes"] += mult * v["bytes"]
+
+
+# ops fusable into consumers for traffic purposes. NOTE: "slice" must NOT
+# be here — resolving reads *through* a slice would charge the consumer the
+# full pre-slice buffer (measured 100x overcount via scan-saved
+# activations on llama3-405b, §Perf C).
+_EWLIKE = _EW1 | _EWT | {"broadcast", "transpose", "reverse", "pad",
+                         "concatenate"}
+
+
+def _virtual_set(comp: Computation) -> set[str]:
+    """Instructions treated as fused away for HBM-traffic purposes:
+    elementwise ops / kLoop fusions with exactly one consumer. This
+    approximates TPU fusion granularity — the CPU backend emits long chains
+    of small kLoop fusions whose boundary buffers never exist on TPU."""
+    consumers: dict[str, int] = {}
+    for iname in comp.order:
+        for o in comp.instructions[iname].operands:
+            consumers[o] = consumers.get(o, 0) + 1
+    virtual = set()
+    root = comp.order[-1] if comp.order else None
+    for iname in comp.order:
+        ins = comp.instructions[iname]
+        fusable = (ins.opcode in _EWLIKE
+                   or (ins.opcode == "fusion" and "kind=kLoop" in ins.attrs))
+        if fusable and consumers.get(iname, 0) == 1 and iname != root:
+            virtual.add(iname)
+    return virtual
+
+
+def _resolve_reads(comp: Computation, virtual: set[str], name: str,
+                   memo: dict) -> float:
+    """Bytes read when consuming ``name``: through virtual chains, the reads
+    are the chain's ultimate real inputs."""
+    if name in memo:
+        return memo[name]
+    ins = comp.instructions.get(name)
+    if ins is None:
+        return 0.0
+    if ins.opcode == "constant":
+        memo[name] = 0.0
+        return 0.0
+    if name not in virtual:
+        memo[name] = ins.bytes
+        return ins.bytes
+    memo[name] = 0.0  # cycle guard
+    total = sum(_resolve_reads(comp, virtual, o, memo) for o in ins.operands)
+    memo[name] = total
+    return total
+
+
+def analyze_hlo(hlo_text: str) -> HLOCostModel:
+    comps, entry = _parse_computations(hlo_text)
+    unknown_whiles = [0]
+
+    memo: dict[tuple, _Cost] = {}
+
+    def comp_cost(cname: str, in_loop: bool = False) -> _Cost:
+        key = (cname, in_loop)
+        if key in memo:
+            return memo[key]
+        comp = comps.get(cname)
+        if comp is None:
+            return _Cost()
+        memo[key] = _Cost()  # cycle guard
+        virtual = _virtual_set(comp)
+        read_memo: dict = {}
+        c = _Cost()
+        for iname in comp.order:
+            ins = comp.instructions[iname]
+            called = _called(ins)
+            mult = 1.0
+            if ins.opcode == "while":
+                tc = _trip_count(ins)
+                if tc is None:
+                    unknown_whiles[0] += 1
+                    tc = 1.0
+                mult = tc
+            # flops of this instruction itself
+            if ins.opcode == "dot":
+                f = _dot_flops(ins, comp)
+                c.fl += f
+                c.dfl += f
+            elif ins.opcode in _EW1:
+                c.fl += ins.elems
+            elif ins.opcode in _EWT:
+                c.fl += 8.0 * ins.elems
+            elif ins.opcode in ("reduce", "reduce-window"):
+                in_elems = max((comp.instructions[o].elems
+                                for o in ins.operands
+                                if o in comp.instructions),
+                               default=ins.elems)
+                c.fl += in_elems
+            elif ins.opcode == "sort":
+                n = max(ins.elems, 2.0)
+                c.fl += n * math.log2(n)
+            # recurse into called computations; fusion bodies contribute
+            # flops/collectives but no HBM traffic (internal buffers)
+            sub_in_loop = in_loop or ins.opcode == "while"
+            for sub in called:
+                include_hb = ins.opcode not in ("fusion", "reduce",
+                                                "reduce-window", "sort",
+                                                "scatter", "select-and-scatter",
+                                                "map", "all-reduce",
+                                                "reduce-scatter")
+                c.add(comp_cost(sub, sub_in_loop), mult=mult,
+                      include_hb=include_hb)
+            # collectives
+            base = ins.opcode.replace("-start", "")
+            if base in _COLLECTIVES:
+                ob = sum(comp.instructions[o].bytes for o in ins.operands
+                         if o in comp.instructions)
+                c.cb += mult * ob
+                slot = c.coll.setdefault(base, {"count": 0.0, "bytes": 0.0})
+                slot["count"] += mult
+                slot["bytes"] += mult * ob
+            # HBM traffic at (approximated TPU) fusion-boundary granularity:
+            # virtual (single-consumer elementwise/kLoop) producers are
+            # fused away; reads resolve through them to real inputs.
+            if ins.opcode not in _SKIP_BYTES and iname not in virtual:
+                traffic = _instr_traffic(ins, comp, virtual, read_memo,
+                                         comps)
+                c.hb += mult * traffic
+                if in_loop and traffic > _LOOP_ARTIFACT_THRESHOLD:
+                    c.art += mult * traffic
+        memo[key] = c
+        return c
+
+    total = comp_cost(entry)
+    return HLOCostModel(flops=total.fl, dot_flops=total.dfl,
+                        hbm_bytes=total.hb, collective_bytes=total.cb,
+                        collective_detail=total.coll,
+                        unknown_trip_whiles=unknown_whiles[0],
+                        loop_artifact_bytes=total.art)

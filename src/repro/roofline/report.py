@@ -1,0 +1,85 @@
+"""Three-term roofline report from dry-run artifacts.
+
+Hardware model: TPU v5e (the deployment target; see assignment constants):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Terms (seconds, per step, per device — the HLO module is per-device):
+  compute    = analyzed FLOPs / 197e12
+  memory     = modeled HBM bytes / 819e9
+  collective = collective bytes / 50e9
+The dominant term approximates step time under perfect overlap; the ratio
+MODEL_FLOPS / analyzed FLOPs flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.roofline.hlo_analysis import HLOCostModel
+
+V5E = {
+    "peak_flops_bf16": 197e12,
+    "hbm_bw": 819e9,
+    "ici_bw_per_link": 50e9,
+    "hbm_bytes": 16 * 2 ** 30,
+}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_per_device: float
+    analyzed_flops_per_device: float
+    useful_fraction: float      # MODEL_FLOPS / analyzed
+    roofline_fraction: float    # compute_s / max(term)  (MFU-vs-bound proxy)
+    step_time_s: float          # max of terms (perfect-overlap bound)
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig, n_devices: int) -> float:
+    """Useful FLOPs per step per device: 6·N_active·D train, 2·N_active·D
+    inference (D = tokens processed per step)."""
+    n_active = cfg.active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        total = 2.0 * n_active * tokens
+    return total / n_devices
+
+
+def roofline_terms(cost: HLOCostModel, cfg: ArchConfig | None,
+                   shape: ShapeConfig | None, n_devices: int,
+                   model_flops_override: float | None = None) -> RooflineTerms:
+    compute_s = cost.flops / V5E["peak_flops_bf16"]
+    # memory term uses the loop-artifact-corrected bytes (full-carry-buffer
+    # ops the CPU backend schedules inside loop bodies; a TPU compile does
+    # not emit them — both raw and corrected are in the JSON artifacts)
+    memory_s = cost.hbm_bytes_corrected / V5E["hbm_bw"]
+    collective_s = cost.collective_bytes / V5E["ici_bw_per_link"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    if model_flops_override is not None:
+        mf = model_flops_override
+    else:
+        assert cfg is not None and shape is not None
+        mf = model_flops(cfg, shape, n_devices)
+    step = max(terms.values())
+    return RooflineTerms(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant,
+        model_flops_per_device=mf,
+        analyzed_flops_per_device=cost.flops,
+        useful_fraction=mf / cost.flops if cost.flops else 0.0,
+        roofline_fraction=(mf / V5E["peak_flops_bf16"]) / step if step else 0.0,
+        step_time_s=step)

@@ -1,0 +1,1 @@
+"""Serving substrate: batched generate engine + modality frontends."""

@@ -1,0 +1,54 @@
+"""Batched serving engine: prefill + decode loop with a persistent KV cache.
+
+Simplification (documented): the batch decodes in lockstep (uniform
+positions) — the standard benchmark-serving shape (decode_32k cell). A
+continuous-batching scheduler would sit one level above this engine and is
+out of scope for the paper's workload.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, max_len: int = 2048):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        def _step(params, pos, cache, token):
+            return lm.decode_step(params, cfg, pos, cache, token=token)
+
+        self._decode = jax.jit(_step, donate_argnums=(2,))
+
+    def generate(self, prompts: jax.Array, n_steps: int,
+                 temperature: float = 0.0, key=None):
+        """prompts: (B, S) int32 -> (B, n_steps) int32 generated tokens."""
+        cfg = self.cfg
+        b, s = prompts.shape
+        assert s + n_steps <= self.max_len
+        logits, cache = lm.prefill(self.params, cfg, tokens=prompts,
+                                   max_len=self.max_len)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        out = []
+        tok = self._sample(logits, temperature, key)
+        out.append(tok)
+        for i in range(1, n_steps):
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, pos=jnp.asarray(s + i - 1),
+                                         cache=cache, token=tok)
+            tok = self._sample(logits, temperature, sub)
+            out.append(tok)
+        return jnp.stack(out, axis=1)
+
+    @staticmethod
+    def _sample(logits, temperature, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature, axis=-1
+                                      ).astype(jnp.int32)

@@ -1,0 +1,86 @@
+"""Modality frontend stubs for the [vlm]/[audio] archs — and the one place
+the paper's technique genuinely transfers to the LM zoo.
+
+Chameleon's image tokenizer (VQ-VAE) and MusicGen's EnCodec (residual VQ)
+both perform nearest-codebook search: for each patch/frame latent, find the
+closest codebook vector. That is *exactly* the FPPS NN-search problem
+(DESIGN.md §5 Arch-applicability), so the frontends here run on the FPPS
+engine — the Pallas kernel on TPU, its XLA twin elsewhere.
+
+These are STUBS per the assignment: the conv encoders that would produce
+latents are out of scope; latents arrive precomputed. What is real is the
+quantisation math and the NN search.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nn_search import nn_search
+
+
+def _pad3(x: jax.Array, d: int) -> jax.Array:
+    """Embed d-dim VQ vectors into the kernel's 3-D point space when d<=3,
+    else keep native d (the XLA engine handles any d; the Pallas kernel's
+    augmented layout is 3-D — higher-d codebooks use the XLA path)."""
+    if x.shape[-1] == d:
+        return x
+    raise ValueError
+
+
+def vq_encode(latents: jax.Array, codebook: jax.Array, *, chunk: int = 2048,
+              use_pallas: bool = False):
+    """latents (..., D), codebook (K, D) -> (codes (...), quantised)."""
+    flat = latents.reshape(-1, latents.shape[-1])
+    if use_pallas and latents.shape[-1] == 3:
+        from repro.kernels.ops import nn_search_pallas
+        interpret = jax.default_backend() != "tpu"
+        d2, idx = nn_search_pallas(flat, codebook, None, interpret=interpret)
+    else:
+        d2, idx = _nn_anyd(flat, codebook, chunk)
+    quant = jnp.take(codebook, idx, axis=0).reshape(latents.shape)
+    return idx.reshape(latents.shape[:-1]), quant
+
+
+def _nn_anyd(src: jax.Array, dst: jax.Array, chunk: int):
+    """FPPS brute-force NN generalised to D dims (same matmul expansion)."""
+    sn = jnp.sum(src * src, axis=-1, keepdims=True)
+    dn = jnp.sum(dst * dst, axis=-1, keepdims=True).T
+    d2 = jnp.maximum(sn + dn - 2.0 * (src @ dst.T), 0.0)
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return jnp.take_along_axis(d2, idx[:, None], axis=1)[:, 0], idx
+
+
+def rvq_encode(latents: jax.Array, codebooks: jax.Array, *, chunk: int = 2048):
+    """Residual VQ (EnCodec-style): codebooks (L, K, D). Returns
+    (codes (L, ...), reconstruction)."""
+    residual = latents
+    codes, recon = [], jnp.zeros_like(latents)
+    for li in range(codebooks.shape[0]):
+        idx, quant = vq_encode(residual, codebooks[li], chunk=chunk)
+        codes.append(idx)
+        recon = recon + quant
+        residual = residual - quant
+    return jnp.stack(codes, axis=0), recon
+
+
+def chameleon_image_stub(key, batch: int, n_patches: int, d_latent: int = 256,
+                         codebook_size: int = 8192):
+    """Precomputed-patch-latent stand-in for the Chameleon VQ-VAE encoder;
+    returns (image token ids, codebook) via FPPS NN search."""
+    k1, k2 = jax.random.split(key)
+    codebook = jax.random.normal(k1, (codebook_size, d_latent))
+    latents = jax.random.normal(k2, (batch, n_patches, d_latent))
+    codes, _ = vq_encode(latents, codebook)
+    return codes, codebook
+
+
+def musicgen_frame_stub(key, batch: int, n_frames: int, d_latent: int = 128,
+                        n_books: int = 4, codebook_size: int = 2048):
+    """EnCodec-style RVQ stand-in: returns (codes (L,B,T), recon)."""
+    k1, k2 = jax.random.split(key)
+    books = jax.random.normal(k1, (n_books, codebook_size, d_latent))
+    latents = jax.random.normal(k2, (batch, n_frames, d_latent))
+    return rvq_encode(latents, books)

@@ -1,0 +1,1 @@
+"""Training substrate: step functions, checkpointing, fault tolerance."""

@@ -1,0 +1,198 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-k, elastic restore.
+
+Production behaviours implemented (and unit-tested in
+tests/test_checkpoint.py):
+
+  * **Atomicity** — writes go to ``step_N.tmp`` and are ``os.rename``d into
+    place only after every payload + manifest is flushed; a crash mid-write
+    can never leave a readable-but-corrupt checkpoint.
+  * **Async save** — device arrays are fetched (device_get) synchronously
+    (cheap; the training step owns the devices anyway), then serialisation
+    happens on a background thread so the step loop is not blocked on disk.
+  * **keep_last_k** — bounded disk usage with monotonic cleanup; the newest
+    complete checkpoint is never deleted.
+  * **Elastic restore** — checkpoints store full (unsharded) arrays plus a
+    tree manifest; ``restore`` takes target shardings for *any* mesh shape,
+    so a 512-chip run can restart on 256 chips (node failure) and reshard
+    on load. For multi-host deployments the same layout works with
+    process-0-coordinated gather (jax.experimental.multihost_utils);
+    this container is single-process so device_get is already global.
+  * **Preemption hook** — ``install_preemption_handler`` saves on
+    SIGTERM/SIGINT before re-raising, the standard cloud-TPU eviction
+    protocol.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import re
+import shutil
+import signal
+import threading
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(state) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(state)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(e, "key", getattr(e, "idx", getattr(e, "name", e))))
+                        for e in path)
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def save(path: str | os.PathLike, state, step: int,
+         extra: dict | None = None) -> pathlib.Path:
+    """Atomic synchronous save. Returns the final checkpoint dir."""
+    root = pathlib.Path(path)
+    root.mkdir(parents=True, exist_ok=True)
+    final = root / f"step_{step:010d}"
+    tmp = root / f"step_{step:010d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    arrays = _flatten(state)
+    manifest = {"step": step, "extra": extra or {},
+                "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                         for k, v in arrays.items()}}
+    np.savez(tmp / "arrays.npz", **arrays)
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    return final
+
+
+def latest_step(path: str | os.PathLike) -> int | None:
+    root = pathlib.Path(path)
+    if not root.exists():
+        return None
+    steps = [int(m.group(1)) for p in root.iterdir()
+             if (m := re.fullmatch(r"step_(\d+)", p.name))]
+    return max(steps) if steps else None
+
+
+def restore(path: str | os.PathLike, abstract_state, step: int | None = None,
+            shardings=None):
+    """Rebuild ``abstract_state``'s pytree from disk; place with
+    ``shardings`` (same tree structure) if given — this is the elastic
+    reshard path: the target mesh need not match the saving mesh."""
+    root = pathlib.Path(path)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    ckpt = root / f"step_{step:010d}"
+    data = np.load(ckpt / "arrays.npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_state)
+    sh_flat = (jax.tree_util.tree_leaves(shardings)
+               if shardings is not None else [None] * len(flat))
+    leaves = []
+    for (pathk, leaf), sh in zip(flat, sh_flat):
+        key = _SEP.join(str(getattr(e, "key", getattr(e, "idx", getattr(e, "name", e))))
+                        for e in pathk)
+        arr = data[key]
+        expect = tuple(leaf.shape)
+        if tuple(arr.shape) != expect:
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"expected {expect}")
+        arr = arr.astype(leaf.dtype)
+        leaves.append(jax.device_put(arr, sh) if sh is not None
+                      else jax.numpy.asarray(arr))
+    state = jax.tree_util.tree_unflatten(treedef, leaves)
+    manifest = json.loads((ckpt / "manifest.json").read_text())
+    return state, manifest["step"], manifest.get("extra", {})
+
+
+class CheckpointManager:
+    """Async keep-k manager with preemption handling."""
+
+    def __init__(self, directory: str | os.PathLike, keep_last_k: int = 3,
+                 save_interval_steps: int = 100):
+        self.dir = pathlib.Path(directory)
+        self.keep = keep_last_k
+        self.interval = save_interval_steps
+        self._thread: threading.Thread | None = None
+        self._last_saved: int | None = latest_step(self.dir)
+
+    def should_save(self, step: int) -> bool:
+        return step % self.interval == 0
+
+    def save_async(self, state, step: int, extra: dict | None = None):
+        """Fetch to host now; serialise + publish on a worker thread."""
+        self.wait()  # one in-flight save at a time
+        host_state = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), state)
+
+        def work():
+            save(self.dir, host_state, step, extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        self._last_saved = step
+
+    def save_sync(self, state, step: int, extra: dict | None = None):
+        self.wait()
+        save(self.dir, state, step, extra)
+        self._last_saved = step
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, abstract_state, shardings=None):
+        self.wait()
+        return restore(self.dir, abstract_state, shardings=shardings)
+
+    def _gc(self):
+        steps = sorted(int(m.group(1)) for p in self.dir.iterdir()
+                       if (m := re.fullmatch(r"step_(\d+)", p.name)))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+        for p in self.dir.glob("step_*.tmp"):  # crashed partial writes
+            shutil.rmtree(p, ignore_errors=True)
+
+
+def install_preemption_handler(manager: CheckpointManager,
+                               get_state: Callable[[], tuple[Any, int]]):
+    """SIGTERM/SIGINT -> synchronous save -> re-raise default behaviour."""
+    def handler(signum, frame):
+        state, step = get_state()
+        manager.save_sync(state, step, extra={"preempted": True})
+        signal.signal(signum, signal.SIG_DFL)
+        os.kill(os.getpid(), signum)
+
+    signal.signal(signal.SIGTERM, handler)
+    signal.signal(signal.SIGINT, handler)
+    return handler
+
+
+class StragglerWatchdog:
+    """Step-time EMA monitor: flags steps slower than ``threshold`` x the
+    running mean — on a real fleet this triggers hot-spare swap /
+    checkpoint-restart; here it logs and counts (tested in unit tests)."""
+
+    def __init__(self, threshold: float = 2.0, alpha: float = 0.1):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.ema: float | None = None
+        self.flagged: list[tuple[int, float]] = []
+
+    def observe(self, step: int, duration_s: float) -> bool:
+        is_straggler = (self.ema is not None
+                        and duration_s > self.threshold * self.ema)
+        if is_straggler:
+            self.flagged.append((step, duration_s))
+        self.ema = (duration_s if self.ema is None
+                    else (1 - self.alpha) * self.ema + self.alpha * duration_s)
+        return is_straggler

@@ -1,0 +1,26 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count forcing here — smoke
+tests and benchmarks must see the real single CPU device; only
+launch/dryrun.py (and the subprocess-based distribution tests, which spawn
+fresh interpreters) use placeholder device fleets."""
+import os
+
+import numpy as np
+import pytest
+
+# Keep hypothesis + jax deterministic and CI-friendly.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture(scope="session")
+def small_scene():
+    """A reduced synthetic LiDAR frame pair (fast enough for unit tests)."""
+    from repro.data.pointcloud import SceneConfig, frame_pair
+    cfg = SceneConfig(n_ground=6000, n_walls=4200, n_poles=1200,
+                      n_clutter=1300, extent=40.0, sensor_range=45.0)
+    src, dst, T_gt = frame_pair(seq=0, frame=5, cfg=cfg, n_source_samples=1024)
+    return src, dst, T_gt
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,175 @@
+"""Attention unit tests: GQA vs einsum reference, blocked == full, local
+window masking, MLA decode absorption, ring-cache equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models import layers as L
+
+CFG = A.AttnConfig(d_model=64, n_heads=8, n_kv_heads=2, d_head=16)
+
+
+def _ref_attention(q, k, v, window=0):
+    """Naive causal GQA reference."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    out = np.zeros_like(np.asarray(q), dtype=np.float32)
+    qn, kn, vn = map(lambda t: np.asarray(t, dtype=np.float32), (q, k, v))
+    for hi in range(h):
+        kv = hi // g
+        scores = qn[:, :, hi] @ kn[:, :, kv].transpose(0, 2, 1) / np.sqrt(d)
+        mask = np.tril(np.ones((s, s), bool))
+        if window:
+            mask &= ~np.tril(np.ones((s, s), bool), -window)
+        scores = np.where(mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out[:, :, hi] = np.einsum("bqk,bkd->bqd", np.asarray(probs), vn[:, :, kv])
+    return out
+
+
+@pytest.mark.parametrize("window", [0, 8])
+def test_sdpa_matches_reference(window):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    b, s = 2, 32
+    q = jax.random.normal(ks[0], (b, s, 8, 16))
+    k = jax.random.normal(ks[1], (b, s, 2, 16))
+    v = jax.random.normal(ks[2], (b, s, 2, 16))
+    pos = jnp.arange(s)
+    out = A._sdpa(q, k, v, pos, pos, window=window, scale=16 ** -0.5)
+    ref = _ref_attention(q, k, v, window)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-3, atol=1e-3)
+
+
+def test_blocked_equals_full():
+    cfg_full = CFG
+    cfg_blk = A.AttnConfig(**{**CFG.__dict__, "q_block": 8})
+    p = A.gqa_init(jax.random.PRNGKey(1), cfg_full)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 32, 64)) * 0.3
+    pos = jnp.arange(32)
+    a = A.gqa_forward(p, x, pos, cfg_full)
+    b = A.gqa_forward(p, x, pos, cfg_blk)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_decode_matches_forward_stepwise():
+    p = A.gqa_init(jax.random.PRNGKey(3), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 16, 64)) * 0.3
+    pos = jnp.arange(16)
+    full = A.gqa_forward(p, x, pos, CFG)
+    cache = A.gqa_init_cache(1, 16, CFG, jnp.float32)
+    outs = []
+    for t in range(16):
+        o, cache = A.gqa_decode_step(p, x[:, t:t + 1], jnp.asarray(t), cache,
+                                     CFG)
+        outs.append(o)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stream), np.asarray(full),
+                               rtol=1e-3, atol=2e-3)
+
+
+def test_ring_cache_local_attention():
+    """Windowed decode with a ring cache == full recompute with window mask."""
+    cfg = A.AttnConfig(d_model=32, n_heads=4, n_kv_heads=1, d_head=8, window=8)
+    p = A.gqa_init(jax.random.PRNGKey(5), cfg)
+    s = 24
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, s, 32)) * 0.3
+    pos = jnp.arange(s)
+    full = A.gqa_forward(p, x, pos, cfg)
+    cache = A.gqa_init_cache(1, s, cfg, jnp.float32)   # ring of size 8
+    assert cache["k"].shape[1] == 8
+    outs = []
+    for t in range(s):
+        o, cache = A.gqa_decode_step(p, x[:, t:t + 1], jnp.asarray(t), cache,
+                                     cfg)
+        outs.append(o)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stream), np.asarray(full),
+                               rtol=1e-3, atol=2e-3)
+
+
+def test_mla_decode_absorption():
+    """Absorbed-latent decode must match the naive (decompressed) forward."""
+    cfg = A.AttnConfig(d_model=64, n_heads=4, n_kv_heads=4, d_head=24,
+                       q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                       qk_rope_head_dim=8, v_head_dim=16)
+    p = A.mla_init(jax.random.PRNGKey(7), cfg)
+    s = 12
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, s, 64)) * 0.3
+    pos = jnp.arange(s)
+    full = A.mla_forward(p, x, pos, cfg)
+    cache = A.mla_init_cache(2, s, cfg, jnp.float32)  # fp32 cache: exactness
+    outs = []
+    for t in range(s):
+        o, cache = A.mla_decode_step(p, x[:, t:t + 1], jnp.asarray(t), cache,
+                                     cfg)
+        outs.append(o)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stream), np.asarray(full),
+                               rtol=1e-3, atol=2e-3)
+
+
+def test_rope_preserves_norm_and_relativity():
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (1, 8, 2, 16))
+    pos = jnp.arange(8)
+    y = L.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # relative property: <rope(q,m), rope(k,n)> depends only on m-n
+    q = jax.random.normal(jax.random.PRNGKey(10), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(11), (1, 1, 1, 16))
+    def dot_at(m, n):
+        qm = L.apply_rope(jnp.broadcast_to(q, (1, 1, 1, 16)), jnp.array([m]), 1e4)
+        kn = L.apply_rope(jnp.broadcast_to(k, (1, 1, 1, 16)), jnp.array([n]), 1e4)
+        return float(jnp.sum(qm * kn))
+    assert abs(dot_at(5, 3) - dot_at(9, 7)) < 1e-3
+
+
+def test_int8_kv_cache_decode():
+    """Quantized KV cache: decode must match the fp cache within int8 error,
+    and the cache arrays must actually be int8."""
+    cfg_q = A.AttnConfig(d_model=64, n_heads=8, n_kv_heads=2, d_head=16,
+                         kv_quant=True)
+    p = A.gqa_init(jax.random.PRNGKey(3), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 16, 64)) * 0.3
+    pos = jnp.arange(16)
+    full = A.gqa_forward(p, x, pos, CFG)
+    cache = A.gqa_init_cache(1, 16, cfg_q)
+    assert cache["k"].dtype == jnp.int8 and "k_scale" in cache
+    outs = []
+    for t in range(16):
+        o, cache = A.gqa_decode_step(p, x[:, t:t + 1], jnp.asarray(t), cache,
+                                     cfg_q)
+        outs.append(o)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stream), np.asarray(full),
+                               rtol=0.05, atol=0.02)
+    # cache bytes: int8 k/v + bf16 scales ~= 0.56x of bf16 k/v
+    q_bytes = sum(v.size * v.dtype.itemsize for k, v in cache.items()
+                  if k != "pos")
+    fp_bytes = 2 * 1 * 16 * 2 * 16 * 2
+    assert q_bytes < 0.6 * fp_bytes
+
+
+def test_int8_kv_prefill_then_decode():
+    cfg_q = A.AttnConfig(d_model=64, n_heads=8, n_kv_heads=2, d_head=16,
+                         kv_quant=True)
+    p = A.gqa_init(jax.random.PRNGKey(5), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 12, 64)) * 0.3
+    pos = jnp.arange(12)
+    full = A.gqa_forward(p, x, pos, CFG)
+    _, cache = A.gqa_prefill_cache(p, x[:, :8], pos[:8], cfg_q, max_len=12)
+    outs = []
+    for t in range(8, 12):
+        o, cache = A.gqa_decode_step(p, x[:, t:t + 1], jnp.asarray(t), cache,
+                                     cfg_q)
+        outs.append(o)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stream), np.asarray(full[:, 8:]),
+                               rtol=0.05, atol=0.02)

@@ -1,0 +1,123 @@
+"""Checkpointing + fault-tolerance behaviours."""
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import lm
+from repro.optim import adamw, cosine_schedule
+from repro.train import checkpoint as ckpt
+from repro.train.train_step import TrainState, init_state
+
+
+@pytest.fixture
+def state():
+    cfg = get_smoke("qwen2-0.5b")
+    opt = adamw(cosine_schedule(1e-3))
+    return init_state(jax.random.PRNGKey(0), cfg, opt)
+
+
+def _tree_equal(a, b):
+    fa = jax.tree_util.tree_leaves(a)
+    fb = jax.tree_util.tree_leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_save_restore_roundtrip(tmp_path, state):
+    ckpt.save(tmp_path, state, step=7, extra={"note": "x"})
+    abstract = jax.eval_shape(lambda: state)
+    restored, step, extra = ckpt.restore(tmp_path, abstract)
+    assert step == 7 and extra == {"note": "x"}
+    _tree_equal(state, restored)
+
+
+def test_atomicity_no_partial_checkpoints(tmp_path, state):
+    """A .tmp dir (simulated crash) must not be restorable/visible."""
+    ckpt.save(tmp_path, state, step=1)
+    # simulate a crashed half-write
+    (tmp_path / "step_0000000002.tmp").mkdir()
+    assert ckpt.latest_step(tmp_path) == 1
+    _, step, _ = ckpt.restore(tmp_path, jax.eval_shape(lambda: state))
+    assert step == 1
+
+
+def test_keep_last_k(tmp_path, state):
+    mgr = ckpt.CheckpointManager(tmp_path, keep_last_k=2, save_interval_steps=1)
+    for s in (1, 2, 3, 4):
+        mgr.save_sync(state, s)
+    steps = sorted(p.name for p in tmp_path.iterdir())
+    assert steps == ["step_0000000003", "step_0000000004"]
+
+
+def test_async_save_and_restore(tmp_path, state):
+    mgr = ckpt.CheckpointManager(tmp_path, keep_last_k=3)
+    mgr.save_async(state, 10)
+    mgr.wait()
+    restored, step, _ = mgr.restore_latest(jax.eval_shape(lambda: state))
+    assert step == 10
+    _tree_equal(state, restored)
+
+
+def test_elastic_restore_with_shardings(tmp_path, state):
+    """Restore onto explicit (single-device, stand-in for resized-mesh)
+    shardings."""
+    ckpt.save(tmp_path, state, step=3)
+    dev = jax.devices()[0]
+    shardings = jax.tree_util.tree_map(
+        lambda _: jax.sharding.SingleDeviceSharding(dev), state)
+    restored, step, _ = ckpt.restore(tmp_path, jax.eval_shape(lambda: state),
+                                     shardings=shardings)
+    _tree_equal(state, restored)
+
+
+def test_restore_shape_mismatch_raises(tmp_path, state):
+    ckpt.save(tmp_path, state, step=1)
+    bad = jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct((l.shape[0] + 1,) + l.shape[1:],
+                                       l.dtype)
+        if l.ndim else jax.ShapeDtypeStruct(l.shape, l.dtype),
+        jax.eval_shape(lambda: state))
+    with pytest.raises(ValueError):
+        ckpt.restore(tmp_path, bad)
+
+
+def test_straggler_watchdog():
+    wd = ckpt.StragglerWatchdog(threshold=2.0, alpha=0.5)
+    for _ in range(5):
+        wd.observe(0, 1.0)
+    assert not wd.observe(5, 1.5)
+    assert wd.observe(6, 10.0)          # 10x the EMA -> flagged
+    assert wd.flagged and wd.flagged[-1][0] == 6
+
+
+def test_train_resume_bit_identical(tmp_path):
+    """Crash/restart: training resumed from a checkpoint must produce the
+    same params as the uninterrupted run (determinism incl. data stream)."""
+    from repro.data.tokens import TokenStream
+    from repro.train.train_step import make_train_step
+    cfg = get_smoke("qwen2-0.5b")
+    opt = adamw(cosine_schedule(1e-3, warmup_steps=2, total_steps=50))
+    stream = TokenStream(cfg.vocab_size, batch=2, seq_len=16, seed=3)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+
+    def run(n, state, start=0):
+        for s in range(start, n):
+            state, _ = step_fn(state, stream.batch_at(s))
+        return state
+
+    s0 = init_state(jax.random.PRNGKey(1), cfg, opt)
+    full = run(6, s0)
+    # interrupted at 3, checkpointed, restored, resumed
+    s1 = init_state(jax.random.PRNGKey(1), cfg, opt)
+    mid = run(3, s1)
+    ckpt.save(tmp_path, mid, step=3)
+    restored, step, _ = ckpt.restore(tmp_path, jax.eval_shape(lambda: mid))
+    resumed = run(6, restored, start=step)
+    _tree_equal(full.params, resumed.params)

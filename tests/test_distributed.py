@@ -1,0 +1,20 @@
+"""Distribution tests run in a subprocess so the 8-device host-platform
+fleet never leaks into this interpreter (smoke tests must see 1 device)."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_distributed_icp_subprocess():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "distributed_worker.py")],
+        capture_output=True, text=True, timeout=900,
+        env={**__import__("os").environ, "PYTHONPATH": str(ROOT / "src")},
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL-DISTRIBUTED-OK" in proc.stdout

@@ -1,0 +1,124 @@
+"""Pallas NN-search kernel vs pure-jnp oracle (interpret mode on CPU).
+
+Per-kernel requirement: sweep shapes/dtypes and assert_allclose against the
+ref.py oracle. idx is checked by *distance equivalence* (fp ties may resolve
+to either index legally) plus exact match against the blocked oracle, which
+replays the kernel's tie-break semantics bit-for-bit at the index level.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.transform import random_rigid_transform
+from repro.kernels.nn_search import nn_search_kernel, vmem_bytes
+from repro.kernels.ops import make_frame_engine, nn_search_pallas
+from repro.kernels.ref import (augment_source, augment_target, nn_search_ref,
+                               nn_search_ref_blocked)
+
+SHAPES = [
+    (128, 256, 128, 256),      # single tile
+    (256, 1024, 128, 256),     # multi-tile both axes
+    (300, 1000, 128, 256),     # ragged -> padding path
+    (512, 4096, 512, 1024),    # production tile sizes
+    (1, 130_000, 128, 1024),   # paper's per-point candidate count (~130k)
+    (1024, 313, 256, 256),     # target smaller than one tile
+]
+
+
+@pytest.mark.parametrize("n,m,bn,bm", SHAPES)
+def test_kernel_vs_oracle(n, m, bn, bm):
+    key = jax.random.PRNGKey(n * 7 + m)
+    k1, k2, k3 = jax.random.split(key, 3)
+    src = jax.random.uniform(k1, (n, 3), minval=-60, maxval=60)
+    dst = jax.random.uniform(k2, (m, 3), minval=-60, maxval=60)
+    T = random_rigid_transform(k3)
+    d2_k, idx_k = nn_search_pallas(src, dst, T, bn=bn, bm=bm, interpret=True)
+    d2_ref, idx_ref = nn_search_ref(src, dst, T)
+    np.testing.assert_allclose(np.asarray(d2_k), np.asarray(d2_ref),
+                               rtol=1e-5, atol=1e-2)
+    # Blocked oracle replays tiling/tie-break exactly -> idx must be equal.
+    d2_b, idx_b = nn_search_ref_blocked(src, dst, T, bn, bm)
+    np.testing.assert_array_equal(np.asarray(idx_k), np.asarray(idx_b))
+    assert idx_k.dtype == jnp.int32
+    assert bool(jnp.all((idx_k >= 0) & (idx_k < m)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_kernel_dtype_sweep(dtype):
+    """Points arrive in various dtypes; augmentation is fp32 — results must
+    match the oracle fed the same (cast) points."""
+    key = jax.random.PRNGKey(11)
+    k1, k2 = jax.random.split(key)
+    src = jax.random.uniform(k1, (256, 3), minval=-20, maxval=20).astype(dtype)
+    dst = jax.random.uniform(k2, (512, 3), minval=-20, maxval=20).astype(dtype)
+    d2_k, idx_k = nn_search_pallas(src, dst, None, bn=128, bm=256,
+                                   interpret=True)
+    d2_ref, idx_ref = nn_search_ref(src, dst, None)
+    np.testing.assert_allclose(np.asarray(d2_k), np.asarray(d2_ref),
+                               rtol=1e-4, atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(idx_k), np.asarray(idx_ref))
+
+
+def test_no_transform_equals_identity_transform():
+    key = jax.random.PRNGKey(3)
+    k1, k2 = jax.random.split(key)
+    src = jax.random.normal(k1, (128, 3))
+    dst = jax.random.normal(k2, (256, 3))
+    a = nn_search_pallas(src, dst, None, bn=128, bm=256, interpret=True)
+    b = nn_search_pallas(src, dst, jnp.eye(4), bn=128, bm=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_frame_engine_matches_one_shot():
+    """The once-per-frame pre-augmented engine must agree with the one-shot
+    wrapper (production ICP uses the engine)."""
+    key = jax.random.PRNGKey(9)
+    k1, k2, k3 = jax.random.split(key, 3)
+    src = jax.random.uniform(k1, (200, 3), minval=-10, maxval=10)
+    dst = jax.random.uniform(k2, (700, 3), minval=-10, maxval=10)
+    T = random_rigid_transform(k3)
+    engine = make_frame_engine(dst, bn=128, bm=256, interpret=True)
+    d2_e, idx_e = engine(src, T)
+    d2_o, idx_o = nn_search_pallas(src, dst, T, bn=128, bm=256, interpret=True)
+    # Engine jits the target augmentation separately -> different XLA fusion
+    # -> last-ulp differences are legitimate; require distance equivalence.
+    np.testing.assert_allclose(np.asarray(d2_e), np.asarray(d2_o),
+                               rtol=1e-4, atol=1e-4)
+    same = np.asarray(idx_e) == np.asarray(idx_o)
+    if not same.all():
+        # Any index disagreement must be a floating-point tie.
+        np.testing.assert_allclose(np.asarray(d2_e)[~same],
+                                   np.asarray(d2_o)[~same],
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_padded_targets_never_win():
+    """All real targets far away + padding nearby-in-index: argmin must still
+    land on a real point."""
+    src = jnp.zeros((128, 3))
+    dst = jnp.full((100, 3), 50.0)  # pads to 256 with +1e30 bias
+    d2, idx = nn_search_pallas(src, dst, None, bn=128, bm=256, interpret=True)
+    assert bool(jnp.all(idx < 100))
+    np.testing.assert_allclose(np.asarray(d2), 7500.0, rtol=1e-5)
+
+
+def test_augmentation_identities():
+    key = jax.random.PRNGKey(21)
+    k1, k2 = jax.random.split(key)
+    src = jax.random.normal(k1, (64, 3))
+    dst = jax.random.normal(k2, (64, 3))
+    sa = augment_source(src)
+    da = augment_target(dst)
+    scores = jax.lax.dot_general(sa, da, (((0,), (0,)), ((), ())))
+    ref = jnp.sum((src[:, None] - dst[None]) ** 2, -1)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_budget_fits():
+    """Default tiles must fit VMEM with double buffering (v5e ~128 MiB)."""
+    b = vmem_bytes(512, 1024)
+    assert b["total_double_buffered"] < 16 * 2 ** 20  # << 128 MiB: headroom for
+    # the compiler's own buffers and future fusion.

@@ -1,0 +1,73 @@
+"""XLA brute-force NN search vs naive reference."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.nn_search import nn_search, pairwise_sq_dists
+
+
+def _naive(src, dst):
+    d2 = jnp.sum((src[:, None, :] - dst[None, :, :]) ** 2, axis=-1)
+    return jnp.min(d2, axis=1), jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("n,m,chunk", [(64, 256, 64), (100, 999, 128),
+                                       (1, 1, 16), (17, 4097, 512)])
+def test_matches_naive(n, m, chunk):
+    key = jax.random.PRNGKey(n * 1000 + m)
+    k1, k2 = jax.random.split(key)
+    src = jax.random.uniform(k1, (n, 3), minval=-30, maxval=30)
+    dst = jax.random.uniform(k2, (m, 3), minval=-30, maxval=30)
+    d2, idx = nn_search(src, dst, chunk=chunk)
+    d2_ref, idx_ref = _naive(src, dst)
+    # idx can differ on exact fp ties; require the *distances* to match and
+    # each returned idx to be a true argmin.
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d2_ref),
+                               rtol=1e-4, atol=1e-4)
+    gathered = jnp.sum((src - dst[idx]) ** 2, axis=-1)
+    np.testing.assert_allclose(np.asarray(gathered), np.asarray(d2_ref),
+                               rtol=1e-4, atol=1e-4)
+    assert idx.dtype == jnp.int32
+    assert bool(jnp.all((idx >= 0) & (idx < m)))
+
+
+def test_pairwise_matches_naive():
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    src = jax.random.normal(k1, (50, 3))
+    dst = jax.random.normal(k2, (70, 3))
+    d2 = pairwise_sq_dists(src, dst)
+    ref = jnp.sum((src[:, None] - dst[None]) ** 2, -1)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(ref), atol=1e-4)
+    assert bool(jnp.all(d2 >= 0))
+
+
+def test_masked_targets():
+    key = jax.random.PRNGKey(5)
+    k1, k2 = jax.random.split(key)
+    src = jax.random.normal(k1, (32, 3))
+    dst = jax.random.normal(k2, (128, 3))
+    valid = jnp.arange(128) < 64
+    d2, idx = nn_search(src, dst, chunk=32, dst_valid=valid)
+    assert bool(jnp.all(idx < 64))
+    d2_ref, idx_ref = _naive(src, dst[:64])
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d2_ref), atol=1e-4)
+
+
+@hypothesis.given(st.integers(0, 10_000), st.integers(1, 200),
+                  st.integers(1, 500))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_property_idx_is_argmin(seed, n, m):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    src = jax.random.uniform(k1, (n, 3), minval=-10, maxval=10)
+    dst = jax.random.uniform(k2, (m, 3), minval=-10, maxval=10)
+    d2, idx = nn_search(src, dst, chunk=64)
+    full = jnp.sum((src[:, None] - dst[None]) ** 2, -1)
+    best = jnp.min(full, axis=1)
+    gathered = full[jnp.arange(n), idx]
+    np.testing.assert_allclose(np.asarray(gathered), np.asarray(best),
+                               rtol=1e-4, atol=1e-4)

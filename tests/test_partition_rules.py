@@ -1,0 +1,85 @@
+"""Partitioning-rule engine unit tests (no multi-device mesh needed: these
+exercise the pure-python rule resolution used by the dry-run)."""
+import types
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.configs.registry import cells, get_shape, runnable_cell
+from repro.launch.dryrun import ICP_SHAPES, _rules_for, _trim_batch_axes
+from repro.launch.mesh import batch_axes_for
+
+
+class FakeMesh:
+    """Duck-typed mesh: .axis_names + .shape mapping (what the rule code uses)."""
+
+    def __init__(self, shape: dict):
+        self.axis_names = tuple(shape)
+        self.shape = shape
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("mesh,batch,expect", [
+    (SINGLE, 256, ("data",)),
+    (SINGLE, 1, ()),                       # long_500k: replicated
+    (SINGLE, 128, ("data",)),
+    (MULTI, 256, ("pod", "data")),
+    (MULTI, 32, ("pod", "data")),          # prefill batch 32 = 2*16
+    (MULTI, 2, ("pod",)),
+    (MULTI, 3, ()),
+])
+def test_batch_axes_for(mesh, batch, expect):
+    assert batch_axes_for(mesh, batch) == expect
+
+
+def test_trim_batch_axes_respects_override_order():
+    # qwen2 wants DP over everything; batch 256 on single pod = data*model
+    got = _trim_batch_axes(SINGLE, ("pod", "data", "model"), 256)
+    assert got == ("data", "model")
+    # but a batch of 128 can't extend onto model (128 % 256 != 0)
+    assert _trim_batch_axes(SINGLE, ("pod", "data", "model"), 128) == ("data",)
+
+
+def test_rules_for_merges_arch_overrides():
+    cfg = get_config("qwen2-0.5b")
+    rules = _rules_for(SINGLE, 256, None, cfg)
+    assert rules["heads"] is None          # 14 heads: no TP
+    assert rules["batch"] == ("data", "model")
+    assert rules["tokens"] == rules["batch"]
+    cfg405 = get_config("llama3-405b")
+    rules = _rules_for(SINGLE, 256, None, cfg405)
+    assert rules["kv_heads"] is None       # 8 kv heads < TP=16
+    assert rules["heads"] == "model"
+
+
+def test_cell_registry_complete():
+    cs = cells()
+    assert len(cs) == 40                   # 10 archs x 4 shapes
+    assert len(ICP_SHAPES) == 2            # + the paper's own cells
+    skipped = [c for c in cs if not runnable_cell(*c)[0]]
+    # long_500k skipped for exactly the 8 non-sub-quadratic archs
+    assert len(skipped) == 8
+    assert all(s == "long_500k" for _, s in skipped)
+    runnable_names = {a for a, s in cs if s == "long_500k"
+                      and runnable_cell(a, s)[0]}
+    assert runnable_names == {"mamba2-780m", "recurrentgemma-9b"}
+
+
+def test_shapes_registry():
+    assert get_shape("train_4k").kind == "train"
+    assert get_shape("decode_32k").kind == "decode"
+    assert get_shape("long_500k").global_batch == 1
+    with pytest.raises(KeyError):
+        get_shape("nope")
+
+
+def test_aconstraint_noop_outside_context():
+    from repro.launch.partition import aconstraint
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    y = aconstraint(x, ("batch", "heads"))
+    assert y is x  # no partitioning context -> identity

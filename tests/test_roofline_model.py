@@ -1,0 +1,115 @@
+"""Roofline HLO-analyzer edge cases beyond test_optim.py's basics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.hlo_analysis import (_shape_bytes_elems, analyze_hlo)
+from repro.roofline.report import V5E, model_flops, roofline_terms
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+
+
+def test_shape_parsing():
+    b, e = _shape_bytes_elems("f32[256,12]{1,0}")
+    assert b == 256 * 12 * 4 and e == 256 * 12
+    b, e = _shape_bytes_elems("(s32[], bf16[4,4]{1,0})")
+    assert b == 4 + 32
+    b, _ = _shape_bytes_elems("pred[8]")
+    assert b == 8
+    b, _ = _shape_bytes_elems("f32[]")
+    assert b == 4
+
+
+def test_dus_counted_at_slice_size():
+    """Scan-state saving (dynamic-update-slice into a large buffer) must be
+    charged slice bytes, not buffer bytes."""
+    def f(xs):
+        def step(c, x):
+            return c + 1.0, (c * x)
+        _, ys = jax.lax.scan(step, jnp.zeros((256, 256)), xs)
+        return ys
+
+    s = jax.ShapeDtypeStruct((64, 256, 256), jnp.float32)
+    compiled = jax.jit(f).lower(s).compile()
+    m = analyze_hlo(compiled.as_text())
+    # total traffic must be O(64 * slice), far below O(64 * full buffer)
+    full_buffer = 64 * 256 * 256 * 4
+    assert m.hbm_bytes < 12 * full_buffer
+
+
+def test_reduce_scatter_and_permute_counted():
+    import subprocess, sys, textwrap  # pragma: no cover - inline check
+    # covered indirectly by dry-run artifacts; here check the regexes accept
+    # async start forms
+    hlo = """
+ENTRY %main (p0: f32[64]) -> f32[64] {
+  %p0 = f32[64]{0} parameter(0)
+  %ag = f32[128]{0} all-gather-start(%p0), dimensions={0}
+  ROOT %r = f32[64]{0} reduce-scatter(%p0), dimensions={0}
+}
+"""
+    m = analyze_hlo(hlo)
+    assert m.collective_detail["all-gather"]["count"] == 1
+    assert m.collective_detail["reduce-scatter"]["count"] == 1
+    assert m.collective_bytes == 2 * 64 * 4
+
+
+def test_model_flops_definitions():
+    cfg = get_config("deepseek-moe-16b")
+    train = model_flops(cfg, SHAPES["train_4k"], 256)
+    decode = model_flops(cfg, SHAPES["decode_32k"], 256)
+    # train: 6*N_active*tokens; decode: 2*N_active per generated token
+    assert train / decode == (6 * 256 * 4096) / (2 * 128)
+
+
+def test_roofline_terms_dominance():
+    from repro.roofline.hlo_analysis import HLOCostModel
+    cost = HLOCostModel(flops=1e15, hbm_bytes=1e9, collective_bytes=1e9)
+    t = roofline_terms(cost, None, None, 1, model_flops_override=5e14)
+    assert t.dominant == "compute"
+    assert abs(t.useful_fraction - 0.5) < 1e-9
+    cost = HLOCostModel(flops=1e12, hbm_bytes=1e13, collective_bytes=1e9)
+    t = roofline_terms(cost, None, None, 1, model_flops_override=1e12)
+    assert t.dominant == "memory"
+
+
+def test_loop_artifact_flagging():
+    """A >10GB-per-iteration op inside a while body is flagged and excluded
+    from the corrected bytes."""
+    from repro.roofline.hlo_analysis import HLOCostModel
+    hlo = """
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+%body (arg: (s32[], f32[128,131072,1024], f32[])) -> (s32[], f32[128,131072,1024], f32[]) {
+  %arg = (s32[], f32[128,131072,1024]{2,1,0}, f32[]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %big = f32[128,131072,1024]{2,1,0} get-tuple-element(%arg), index=1
+  %acc = f32[] get-tuple-element(%arg), index=2
+  %c1 = s32[] constant(1)
+  %c0 = f32[] constant(0)
+  %i2 = s32[] add(%i, %c1)
+  %r = f32[] reduce(%big, %c0), dimensions={0,1,2}, to_apply=%sum
+  %acc2 = f32[] add(%acc, %r)
+  ROOT %t = (s32[], f32[128,131072,1024]{2,1,0}, f32[]) tuple(%i2, %big, %acc2)
+}
+%cond (arg2: (s32[], f32[128,131072,1024], f32[])) -> pred[] {
+  %arg2 = (s32[], f32[128,131072,1024]{2,1,0}, f32[]) parameter(0)
+  %j = s32[] get-tuple-element(%arg2), index=0
+  %n = s32[] constant(4)
+  ROOT %lt = pred[] compare(%j, %n), direction=LT
+}
+ENTRY %main (p: f32[128,131072,1024]) -> f32[] {
+  %p = f32[128,131072,1024]{2,1,0} parameter(0)
+  %z = s32[] constant(0)
+  %zf = f32[] constant(0)
+  %tup = (s32[], f32[128,131072,1024]{2,1,0}, f32[]) tuple(%z, %p, %zf)
+  %w = (s32[], f32[128,131072,1024]{2,1,0}, f32[]) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"4"}}
+  ROOT %out = f32[] get-tuple-element(%w), index=2
+}
+"""
+    m = analyze_hlo(hlo)
+    assert m.loop_artifact_bytes > 0
+    assert m.hbm_bytes_corrected < m.hbm_bytes

@@ -1,0 +1,123 @@
+"""SSD (Mamba-2) and RG-LRU unit tests: chunked == naive recurrence,
+streaming == full, padding exactness."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.ssm import (RGLRUConfig, SSMConfig, mamba2_decode_step,
+                              mamba2_forward, mamba2_init, mamba2_init_state,
+                              rglru_block_forward, rglru_block_init,
+                              rglru_init_state, ssd_chunked, ssd_naive)
+
+
+def _ssd_inputs(key, b=2, s=256, h=4, p=16, n=8):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    return x, dt, A, B, C
+
+
+@pytest.mark.parametrize("chunk", [32, 64, 256])
+def test_ssd_chunked_matches_naive(chunk):
+    x, dt, A, B, C = _ssd_inputs(jax.random.PRNGKey(0))
+    y_c, st_c = ssd_chunked(x, dt, A, B, C, chunk)
+    y_n, st_n = ssd_naive(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_n),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_c), np.asarray(st_n),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_ssd_initial_state():
+    x, dt, A, B, C = _ssd_inputs(jax.random.PRNGKey(1), s=128)
+    st0 = jax.random.normal(jax.random.PRNGKey(7), (2, 4, 16, 8))
+    y_c, f_c = ssd_chunked(x, dt, A, B, C, 32, initial_state=st0)
+    y_n, f_n = ssd_naive(x, dt, A, B, C, initial_state=st0)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_n),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(f_c), np.asarray(f_n),
+                               rtol=1e-3, atol=1e-4)
+
+
+@hypothesis.given(st.integers(0, 10_000), st.integers(1, 64))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_property_ssd_chunk_invariance(seed, s_mult):
+    """Output must not depend on chunk size (property over random shapes)."""
+    s = 8 * ((s_mult % 8) + 1)
+    x, dt, A, B, C = _ssd_inputs(jax.random.PRNGKey(seed), b=1, s=s, h=2, p=8,
+                                 n=4)
+    y1, _ = ssd_chunked(x, dt, A, B, C, chunk=8)
+    y2, _ = ssd_chunked(x, dt, A, B, C, chunk=s)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_mamba2_streaming_matches_full():
+    cfg = SSMConfig(d_model=64, d_state=16, expand=2, headdim=16, chunk=32)
+    params = mamba2_init(jax.random.PRNGKey(1), cfg)
+    u = jax.random.normal(jax.random.PRNGKey(2), (2, 96, 64)) * 0.5
+    full = mamba2_forward(params, u, cfg)
+    out, state = mamba2_forward(params, u[:, :64], cfg, return_state=True)
+    outs = [out]
+    for t in range(64, 96):
+        o, state = mamba2_decode_step(params, u[:, t:t + 1], state, cfg)
+        outs.append(o)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stream), np.asarray(full),
+                               rtol=1e-3, atol=2e-3)
+
+
+def test_mamba2_ragged_seq_padding_exact():
+    """S not divisible by chunk: the dt=0 padding must be a no-op."""
+    cfg = SSMConfig(d_model=32, d_state=8, expand=2, headdim=8, chunk=16)
+    params = mamba2_init(jax.random.PRNGKey(3), cfg)
+    u = jax.random.normal(jax.random.PRNGKey(4), (1, 48, 32))
+    base = mamba2_forward(params, u, cfg)                      # 48 % 16 == 0
+    ragged = mamba2_forward(params, u[:, :41], cfg)            # 41 % 16 != 0
+    np.testing.assert_allclose(np.asarray(ragged), np.asarray(base[:, :41]),
+                               rtol=1e-4, atol=1e-4)
+    # state must also be exact under padding
+    _, (_, st_ragged) = mamba2_forward(params, u[:, :41], cfg,
+                                       return_state=True)
+    y_n, st_ref = None, None
+    from repro.models.ssm import _causal_conv, _split_proj  # noqa
+    # reference: run naive over 41 steps via decode loop
+    state = mamba2_init_state(1, cfg)
+    for t in range(41):
+        _, state = mamba2_decode_step(params, u[:, t:t + 1], state, cfg)
+    np.testing.assert_allclose(np.asarray(st_ragged), np.asarray(state[1]),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_rglru_streaming_matches_full():
+    cfg = RGLRUConfig(d_model=48, lru_width=64)
+    p = rglru_block_init(jax.random.PRNGKey(3), cfg)
+    u = jax.random.normal(jax.random.PRNGKey(4), (2, 80, 48)) * 0.5
+    full = rglru_block_forward(p, u, cfg)
+    out, st = rglru_block_forward(p, u[:, :48], cfg,
+                                  state=rglru_init_state(2, cfg),
+                                  return_state=True)
+    outs = [out]
+    for t in range(48, 80):
+        o, st = rglru_block_forward(p, u[:, t:t + 1], cfg, state=st,
+                                    return_state=True)
+        outs.append(o)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stream), np.asarray(full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_decay_bounds():
+    """RG-LRU decay a_t must stay in (0, 1) — stability invariant."""
+    cfg = RGLRUConfig(d_model=16, lru_width=16)
+    p = rglru_block_init(jax.random.PRNGKey(5), cfg)
+    lam = p["lambda"].astype(jnp.float32)
+    a_max = jnp.exp(-cfg.c * jax.nn.softplus(lam) * 0.0)   # r=0
+    a_min = jnp.exp(-cfg.c * jax.nn.softplus(lam) * 1.0)   # r=1
+    assert bool(jnp.all(a_max <= 1.0)) and bool(jnp.all(a_min > 0.0))

@@ -1,0 +1,61 @@
+"""SE(3) utilities + Kabsch estimation properties."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import transform as tf
+
+
+def test_rotation_is_orthogonal():
+    key = jax.random.PRNGKey(0)
+    for i in range(10):
+        key, k1, k2 = jax.random.split(key, 3)
+        R = tf.rotation_from_axis_angle(jax.random.normal(k1, (3,)),
+                                        jax.random.uniform(k2, (), minval=-3, maxval=3))
+        np.testing.assert_allclose(np.asarray(R @ R.T), np.eye(3), atol=1e-6)
+        assert abs(float(jnp.linalg.det(R)) - 1.0) < 1e-5
+
+
+@hypothesis.given(st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_kabsch_recovers_random_transform(seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    pts = jax.random.normal(k1, (200, 3)) * 10.0
+    T = tf.random_rigid_transform(k2, max_angle=3.0, max_translation=20.0)
+    dst = tf.transform_points(T, pts)
+    T_est = tf.estimate_rigid_transform(pts, dst)
+    np.testing.assert_allclose(np.asarray(T_est), np.asarray(T), atol=2e-3)
+
+
+def test_kabsch_weighted_ignores_outliers():
+    key = jax.random.PRNGKey(7)
+    k1, k2 = jax.random.split(key)
+    pts = jax.random.normal(k1, (300, 3)) * 5.0
+    T = tf.random_rigid_transform(k2)
+    dst = tf.transform_points(T, pts)
+    # Corrupt 50 correspondences; zero-weight them.
+    dst = dst.at[:50].add(100.0)
+    w = jnp.ones(300).at[:50].set(0.0)
+    T_est = tf.estimate_rigid_transform(pts, dst, w)
+    np.testing.assert_allclose(np.asarray(T_est), np.asarray(T), atol=2e-3)
+
+
+def test_transform_composition_and_delta():
+    key = jax.random.PRNGKey(1)
+    T = tf.random_rigid_transform(key)
+    eye_delta = tf.transform_delta(jnp.eye(4))
+    assert float(eye_delta) == 0.0
+    assert float(tf.transform_delta(T)) > 0.0
+    pts = jax.random.normal(key, (50, 3))
+    out = tf.transform_points(T, tf.transform_points(jnp.linalg.inv(T), pts))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(pts), atol=1e-4)
+
+
+def test_rmse_masked():
+    a = jnp.zeros((4, 3))
+    b = jnp.ones((4, 3))
+    w = jnp.array([1.0, 1.0, 0.0, 0.0])
+    assert abs(float(tf.rmse(a, b, w)) - np.sqrt(3.0)) < 1e-6
