@@ -14,6 +14,11 @@ from repro.data.pointcloud import SceneConfig, frame_pair
 BENCH_SCENE = SceneConfig(n_ground=18_000, n_walls=13_500, n_poles=3_600,
                           n_clutter=3_900, extent=50.0, sensor_range=50.0)
 
+# Tiny scene for --quick smoke runs: every benchmark entry point must
+# complete in seconds so CI can exercise them all.
+QUICK_SCENE = SceneConfig(n_ground=3_000, n_walls=2_200, n_poles=600,
+                          n_clutter=700, extent=30.0, sensor_range=35.0)
+
 # Power/constants for the modeled (projected) columns — labeled as such.
 POWER = {
     "xeon_6246r_paper_w": 16.3,   # paper §IV-D: measured CPU power
@@ -34,11 +39,13 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3):
     return float(np.median(ts))
 
 
-def bench_frames(n_seqs: int = 10, frame: int = 5, samples: int = 4096):
+def bench_frames(n_seqs: int = 10, frame: int = 5, samples: int = 4096,
+                 scene: SceneConfig | None = None):
     """One frame-pair per synthetic sequence (stand-ins for KITTI 00-09)."""
+    scene = BENCH_SCENE if scene is None else scene
     out = []
     for seq in range(n_seqs):
-        out.append(frame_pair(seq, frame, BENCH_SCENE, samples))
+        out.append(frame_pair(seq, frame, scene, samples))
     return out
 
 

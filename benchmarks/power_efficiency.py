@@ -19,11 +19,12 @@ from benchmarks.registration_latency import _project_v5e_frame_s
 from repro.core.baseline import kdtree_icp
 
 
-def run(n_seqs: int = 3, samples: int = 2048, iters: int = 50):
+def run(n_seqs: int = 3, samples: int = 2048, iters: int = 50, scene=None):
     rows = []
     effs = []
     for seq, (src, dst, _) in enumerate(bench_frames(n_seqs,
-                                                     samples=samples)):
+                                                     samples=samples,
+                                                     scene=scene)):
         t_cpu = timeit(lambda: kdtree_icp(src, dst, iters), warmup=0, iters=1)
         t_tpu = _project_v5e_frame_s(src.shape[0], dst.shape[0], iters)
         eff_cpu = 1.0 / (t_cpu * POWER["xeon_6246r_paper_w"])   # frames/J

@@ -13,11 +13,12 @@ from repro.core import FppsICP
 from repro.core.baseline import kdtree_icp
 
 
-def run(n_seqs: int = 10, samples: int = 2048):
+def run(n_seqs: int = 10, samples: int = 2048, scene=None):
     rows = []
     deltas = []
     for seq, (src, dst, T_gt) in enumerate(bench_frames(n_seqs,
-                                                        samples=samples)):
+                                                        samples=samples,
+                                                        scene=scene)):
         reg = FppsICP()
         reg.setInputSource(src)
         reg.setInputTarget(dst)

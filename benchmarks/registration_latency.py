@@ -33,10 +33,10 @@ def _project_v5e_frame_s(n: int, m: int, iters: int) -> float:
     return max(compute_s, memory_s)
 
 
-def run(n_seqs: int = 5, samples: int = 2048, iters: int = 50):
+def run(n_seqs: int = 5, samples: int = 2048, iters: int = 50, scene=None):
     rows = []
     speedups = []
-    frames = bench_frames(n_seqs, samples=samples)
+    frames = bench_frames(n_seqs, samples=samples, scene=scene)
     params = ICPParams(max_iterations=iters, chunk=2048)
     jitted = jax.jit(lambda s, d: icp_fixed_iterations(s, d, params))
     for seq, (src, dst, _) in enumerate(frames):

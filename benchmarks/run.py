@@ -1,11 +1,16 @@
 """Benchmark harness: one module per paper table. Prints
 ``name,us_per_call,derived`` CSV.
 
-  table3 -> registration_accuracy  (Table III: RMSE parity)
-  table4 -> registration_latency   (Table IV: latency + acceleration)
-  table2 -> kernel_resources       (Table II: resource budget)
-  power  -> power_efficiency       (§IV-D: perf/W, modeled)
-  roofline -> roofline_report      (dry-run roofline summaries)
+  table3 -> registration_accuracy    (Table III: RMSE parity)
+  table4 -> registration_latency     (Table IV: latency + acceleration)
+  table2 -> kernel_resources         (Table II: resource budget)
+  power  -> power_efficiency         (§IV-D: perf/W, modeled)
+  roofline -> roofline_report        (dry-run roofline summaries)
+  throughput -> registration_throughput (looped vs batched frames/sec;
+                                         also writes BENCH_throughput.json)
+
+``--quick`` runs every suite in smoke mode (reduced scenes, 2 frames,
+fewer iterations) so CI can exercise all entry points in seconds.
 """
 from __future__ import annotations
 
@@ -15,8 +20,8 @@ import traceback
 
 from benchmarks import (kernel_resources, power_efficiency,
                         registration_accuracy, registration_latency,
-                        roofline_report)
-from benchmarks.common import emit
+                        registration_throughput, roofline_report)
+from benchmarks.common import QUICK_SCENE, emit
 
 SUITES = {
     "table3": registration_accuracy.run,
@@ -24,19 +29,32 @@ SUITES = {
     "table2": kernel_resources.run,
     "power": power_efficiency.run,
     "roofline": roofline_report.run,
+    "throughput": registration_throughput.run,
+}
+
+# Smoke-mode kwargs per suite (reduced scenes, 2 frames, short loops).
+# Suites absent here are already static/fast (table2, roofline).
+QUICK_KWARGS = {
+    "table3": dict(n_seqs=2, samples=512, scene=QUICK_SCENE),
+    "table4": dict(n_seqs=2, samples=512, iters=10, scene=QUICK_SCENE),
+    "power": dict(n_seqs=2, samples=512, iters=10, scene=QUICK_SCENE),
+    "throughput": dict(quick=True),
 }
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=sorted(SUITES), default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: reduced scenes / 2 frames per suite")
     args = ap.parse_args(argv)
     failed = []
     for name, fn in SUITES.items():
         if args.only and name != args.only:
             continue
+        kwargs = QUICK_KWARGS.get(name, {}) if args.quick else {}
         try:
-            emit(fn())
+            emit(fn(**kwargs))
         except Exception as e:  # report and continue; fail at the end
             failed.append((name, e))
             print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")

@@ -1,9 +1,12 @@
-"""Fleet-scale registration: many frame-pairs in one sharded batch.
+"""Fleet-scale registration: many frame-pairs in one batched engine call.
 
-Demonstrates the multi-device path (shard_map fleet mode) — on this
-container it runs on 1 device; on a pod, frames shard over ("pod","data")
-and each target over "model" (see src/repro/core/distributed.py and the
-fpps-icp dry-run cells).
+Demonstrates the unified engine layer end to end: mixed-size clouds are
+collated into shape buckets and registered by one compiled executable via
+``RegistrationEngine.register_batch``. With ``--engine distributed`` the
+same batch runs through the shard_map fleet mode — on this container that
+is 1 device; on a pod, frames shard over ("pod","data") and each target
+over "model" (see src/repro/core/distributed.py and the fpps-icp dry-run
+cells).
 
     PYTHONPATH=src python examples/fleet_registration.py --frames 4
 """
@@ -14,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ICPParams, icp_fixed_iterations
+from repro.core import ICPParams, get_engine
 from repro.core.transform import random_rigid_transform, transform_points
 
 
@@ -22,30 +25,33 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--frames", type=int, default=4)
     ap.add_argument("--points", type=int, default=1024)
+    ap.add_argument("--engine", default="xla",
+                    choices=["xla", "pallas", "distributed"])
     args = ap.parse_args(argv)
 
     keys = jax.random.split(jax.random.PRNGKey(0), args.frames)
-    srcs, dsts, gts = [], [], []
-    for k in keys:
+    pairs, gts = [], []
+    for i, k in enumerate(keys):
         ka, kb, kc = jax.random.split(k, 3)
-        tgt = jax.random.uniform(ka, (args.points, 3), minval=-10, maxval=10)
+        # Mixed sizes on purpose: the collator buckets them.
+        m = args.points - 37 * (i % 3)
+        tgt = jax.random.uniform(ka, (m, 3), minval=-10, maxval=10)
         T = random_rigid_transform(kb, max_angle=0.1, max_translation=0.3)
         s = transform_points(jnp.linalg.inv(T), tgt)
-        srcs.append(s + 0.002 * jax.random.normal(kc, s.shape))
-        dsts.append(tgt)
-        gts.append(T)
-    src_b, dst_b = jnp.stack(srcs), jnp.stack(dsts)
+        s = s + 0.002 * jax.random.normal(kc, s.shape)
+        pairs.append((np.asarray(s), np.asarray(tgt)))
+        gts.append(np.asarray(T))
 
+    engine = get_engine(args.engine, chunk=256)
     params = ICPParams(max_iterations=25, chunk=256)
-    batched = jax.jit(jax.vmap(
-        lambda s, d: icp_fixed_iterations(s, d, params)))
     t0 = time.time()
-    res = batched(src_b, dst_b)
+    res, batch = engine.register_pairs(pairs, params)
     jax.block_until_ready(res.T)
     dt = time.time() - t0
-    errs = [float(np.abs(np.asarray(res.T[i]) - np.asarray(gts[i])).max())
+    errs = [float(np.abs(np.asarray(res.T[i]) - gts[i]).max())
             for i in range(args.frames)]
-    print(f"{args.frames} registrations in {dt:.2f}s "
+    print(f"{args.frames} registrations (buckets src={batch.src.shape} "
+          f"dst={batch.dst.shape}, engine={args.engine}) in {dt:.2f}s "
           f"({dt / args.frames * 1e3:.0f} ms/frame incl. compile)")
     print("max |T - T_gt| per frame:", [f"{e:.4f}" for e in errs])
     assert max(errs) < 0.05

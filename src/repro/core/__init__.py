@@ -1,13 +1,18 @@
 """FPPS core: the paper's contribution as composable JAX modules."""
 from repro.core.api import FppsICP
-from repro.core.icp import ICPParams, ICPResult, icp, icp_fixed_iterations
+from repro.core.engine import (RegistrationEngine, available_engines,
+                               get_engine, register_engine)
+from repro.core.icp import (ICPParams, ICPResult, icp, icp_batch,
+                            icp_fixed_iterations)
 from repro.core.nn_search import nn_search, pairwise_sq_dists
 from repro.core.svd3x3 import svd3x3
 from repro.core.transform import (estimate_rigid_transform, make_transform,
                                   random_rigid_transform, transform_points)
 
 __all__ = [
-    "FppsICP", "ICPParams", "ICPResult", "icp", "icp_fixed_iterations",
+    "FppsICP", "ICPParams", "ICPResult", "RegistrationEngine",
+    "available_engines", "get_engine", "register_engine",
+    "icp", "icp_batch", "icp_fixed_iterations",
     "nn_search", "pairwise_sq_dists", "svd3x3", "estimate_rigid_transform",
     "make_transform", "random_rigid_transform", "transform_points",
 ]

@@ -2,9 +2,9 @@
 
 The paper ships PCL-style setters so software developers can swap the
 accelerator into existing pipelines. We reproduce that surface exactly
-(camelCase and all), backed by the jittable ICP. ``hardwareInitialize``
-stands in for the .xclbin load: it builds the device mesh / compiles the
-registration executable for the configured engine.
+(camelCase and all), backed by the unified registration engine layer
+(``repro.core.engine``). ``hardwareInitialize`` stands in for the .xclbin
+load: it initialises the configured engine's backend.
 
     icp = FppsICP()
     icp.hardwareInitialize()
@@ -14,41 +14,46 @@ registration executable for the configured engine.
     icp.setMaxIterationCount(50)
     icp.setTransformationEpsilon(1e-5)
     T = icp.align()
+
+``FppsICP`` is a thin adapter: all compilation caching lives on the engine
+instance, so repeated ``align()`` calls (the production shape: one per
+incoming frame) reuse one compiled executable per shape bucket instead of
+recompiling per call.
 """
 from __future__ import annotations
-
-import functools
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.icp import ICPParams, ICPResult, icp
+from repro.core.engine import RegistrationEngine, get_engine
+from repro.core.icp import ICPParams, ICPResult
 
 
 class FppsICP:
     """Drop-in ICP object mirroring the FPPS / PCL interface (paper Table I)."""
 
-    def __init__(self, engine: str = "xla", chunk: int = 2048):
+    def __init__(self, engine: str | RegistrationEngine = "xla",
+                 chunk: int = 2048, **engine_kwargs):
         """engine: 'xla' (default), 'pallas' (TPU kernel; interpret on CPU),
-        or a callable nn_fn(src, dst) -> (d2, idx)."""
-        self._engine = engine
-        self._chunk = chunk
+        'distributed', a ``RegistrationEngine`` instance, or a callable
+        nn_fn(src, dst) -> (d2, idx)."""
+        self._engine = get_engine(engine, chunk=chunk, **engine_kwargs)
         self._source: jax.Array | None = None
         self._target: jax.Array | None = None
         self._initial_T: jax.Array | None = None
         self._max_corr = 1.0
         self._max_iter = 50
         self._eps = 1e-5
+        self._chunk = chunk
         self._initialized = False
         self._last_result: ICPResult | None = None
 
     # -- Table I surface ---------------------------------------------------
     def hardwareInitialize(self) -> None:
-        """Initialise the backend (paper: load .xclbin). Here: verify devices
-        and pre-build the jitted alignment executable cache."""
-        _ = jax.devices()
+        """Initialise the backend (paper: load .xclbin). Here: engine setup —
+        device discovery plus whatever the engine pre-builds."""
+        self._engine.setup()
         self._initialized = True
 
     def setTransformationMatrix(self, transformationMatrix) -> None:
@@ -75,17 +80,16 @@ class FppsICP:
             self.hardwareInitialize()
         if self._source is None or self._target is None:
             raise ValueError("setInputSource/setInputTarget must be called before align()")
-        params = ICPParams(max_iterations=self._max_iter,
-                           max_correspondence_distance=self._max_corr,
-                           transformation_epsilon=self._eps,
-                           chunk=self._chunk)
-        nn_fn = self._make_nn_fn()
-        result = _aligned(self._source, self._target, params,
-                          self._initial_T, nn_fn)
+        result = self._engine.register(self._source, self._target,
+                                       self._params(), self._initial_T)
         self._last_result = jax.tree_util.tree_map(np.asarray, result)
         return np.asarray(result.T)
 
     # -- extras (not in Table I but needed by callers/tests) ----------------
+    @property
+    def engine(self) -> RegistrationEngine:
+        return self._engine
+
     @property
     def last_result(self) -> ICPResult | None:
         return self._last_result
@@ -96,18 +100,8 @@ class FppsICP:
     def getFitnessScore(self) -> float:
         return float(self._last_result.rmse) if self._last_result else float("inf")
 
-    def _make_nn_fn(self) -> Callable | None:
-        if callable(self._engine):
-            return self._engine
-        if self._engine == "xla":
-            return None  # icp() default
-        if self._engine == "pallas":
-            from repro.kernels.ops import nn_search_pallas
-            interpret = jax.default_backend() != "tpu"
-            return functools.partial(nn_search_pallas, interpret=interpret)
-        raise ValueError(f"unknown engine {self._engine!r}")
-
-
-@functools.partial(jax.jit, static_argnames=("params", "nn_fn"))
-def _aligned(source, target, params: ICPParams, initial_T, nn_fn):
-    return icp(source, target, params, initial_T, nn_fn=nn_fn)
+    def _params(self) -> ICPParams:
+        return ICPParams(max_iterations=self._max_iter,
+                         max_correspondence_distance=self._max_corr,
+                         transformation_epsilon=self._eps,
+                         chunk=self._chunk)

@@ -35,11 +35,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.icp import ICPParams, ICPResult, icp, icp_fixed_iterations
 from repro.core.nn_search import nn_search
 
-# jax.shard_map is the public API from 0.8; keep a fallback for older jax.
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.compat import axis_size as _axis_size, shard_map
 
 
 def _local_correspond(src_t: jax.Array, dst_local: jax.Array,
@@ -77,7 +73,7 @@ def distributed_nn_search(mesh: Mesh, src: jax.Array, dst: jax.Array,
         stride = m_local
         for ax in reversed(axes):
             offset = offset + jax.lax.axis_index(ax).astype(jnp.int32) * stride
-            stride = stride * jax.lax.axis_size(ax)
+            stride = stride * _axis_size(ax)
         cand = jnp.concatenate(
             [d2[:, None], (idx_local + offset)[:, None].astype(d2.dtype)], axis=1)
         for ax in axes:
@@ -118,7 +114,8 @@ def batched_icp_sharded(mesh: Mesh, src_batch: jax.Array,
                         params: ICPParams = ICPParams(),
                         *, frame_axes: Sequence[str] = ("data",),
                         target_axes: Sequence[str] = ("model",),
-                        fixed_iterations: bool = True) -> ICPResult:
+                        fixed_iterations: bool = True,
+                        src_valid: jax.Array | None = None) -> ICPResult:
     """Fleet mode: (F, N, 3) sources, (F, M, 3) targets.
 
     Frames shard over ``frame_axes`` (use ("pod", "data") on the multi-pod
@@ -126,24 +123,31 @@ def batched_icp_sharded(mesh: Mesh, src_batch: jax.Array,
     scan-based fixed-iteration ICP: under vmap a while_loop would run every
     frame for the worst frame's trip count anyway, and the static schedule
     is what the dry-run/roofline analyses.
+
+    ``src_valid`` (F, N) zero-weights bucket-padded source rows (see
+    ``repro.data.collate``); padded *target* rows must carry far-sentinel
+    coordinates so the local argmin never picks them — the per-shard winner
+    combine has no mask channel by design (the (d2, xyz) tuple stays dense).
     """
     f_axes, t_axes = tuple(frame_axes), tuple(target_axes)
+    if src_valid is None:
+        src_valid = jnp.ones(src_batch.shape[:2], dtype=src_batch.dtype)
 
-    def body(src_b, dst_b):
-        def one(src, dst_local):
+    def body(src_b, dst_b, sv_b):
+        def one(src, dst_local, sv):
             cfn = functools.partial(_local_correspond, dst_local=dst_local,
                                     chunk=params.chunk, axis_names=t_axes,
                                     score_dtype=params.score_dtype)
             runner = icp_fixed_iterations if fixed_iterations else icp
-            return runner(src, None, params, correspond_fn=cfn)
-        return jax.vmap(one)(src_b, dst_b)
+            return runner(src, None, params, correspond_fn=cfn, src_valid=sv)
+        return jax.vmap(one)(src_b, dst_b, sv_b)
 
     out_specs = ICPResult(T=P(f_axes), rmse=P(f_axes), iterations=P(f_axes),
                           converged=P(f_axes), inlier_frac=P(f_axes))
     fn = shard_map(body, mesh=mesh,
-                   in_specs=(P(f_axes), P(f_axes, t_axes)),
+                   in_specs=(P(f_axes), P(f_axes, t_axes), P(f_axes)),
                    out_specs=out_specs, check_vma=False)
-    return fn(src_batch, dst_batch)
+    return fn(src_batch, dst_batch, src_valid)
 
 
 def shard_inputs(mesh: Mesh, src_batch, dst_batch,

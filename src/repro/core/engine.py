@@ -1,0 +1,395 @@
+"""Unified registration engine layer (DESIGN.md §3).
+
+One abstraction owns everything that used to be scattered across
+``core/api.py`` (per-call nn_fn construction), ``kernels/ops.py`` (target
+residency) and ``core/distributed.py`` (fleet sharding):
+
+  * **engine selection** — a string registry ("xla", "pallas",
+    "distributed") plus user callables, resolved by :func:`get_engine`;
+  * **persistent compilation caches** — each engine instance holds its
+    jitted registration executables keyed by ``(kind, ICPParams)``; jit's
+    own per-shape cache supplies the shape dimension, and shape-bucketed
+    padding (``repro.data.collate``) keeps the number of distinct shapes
+    small. Trace-time counters (:attr:`RegistrationEngine.trace_count`)
+    make recompiles observable, which is what the regression tests assert;
+  * **once-per-frame target preparation** — the Pallas engine builds the
+    (8, M) augmented target at frame scope, outside the per-iteration
+    loop body (the paper's target-cloud-in-BRAM analogue);
+  * **batched multi-frame ICP** — :meth:`RegistrationEngine.register_batch`
+    runs a whole padded frame-pair batch as one device program via
+    ``core.icp.icp_batch``.
+
+Typical use::
+
+    engine = get_engine("pallas")
+    batch = collate_pairs([(src0, dst0), (src1, dst1), ...])
+    res = engine.register_batch(batch.src, batch.dst, params,
+                                src_valid=batch.src_valid,
+                                dst_valid=batch.dst_valid)
+    # res.T[k] is the 4x4 transform of pair k
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.icp import (ICPParams, ICPResult, icp, icp_batch,
+                            icp_fixed_iterations)
+from repro.data.collate import PAD_SENTINEL, bucket_size
+
+
+def _mask_invalid(points: jax.Array, valid: jax.Array | None) -> jax.Array:
+    """Move masked rows to the far sentinel so no searcher can match them."""
+    if valid is None:
+        return points
+    return jnp.where(valid[..., None], points,
+                     jnp.asarray(PAD_SENTINEL, points.dtype))
+
+
+def _pad_device(points: jax.Array, size: int):
+    """Device-side analogue of ``collate.pad_cloud`` — no host round-trip."""
+    n = points.shape[0]
+    padded = jnp.concatenate(
+        [points, jnp.full((size - n, 3), PAD_SENTINEL, points.dtype)], axis=0)
+    valid = jnp.arange(size) < n
+    return padded, valid
+
+
+class RegistrationEngine:
+    """Base engine: owns jit caches, bucketing, and the register API.
+
+    Subclasses pick the correspondence searcher by overriding
+    :meth:`_nn_fn` (simple swaps) or the ``_build_single``/``_build_batch``
+    factories (engines that need frame-scope target preparation).
+    """
+
+    name = "base"
+
+    def __init__(self, chunk: int = 2048):
+        self._chunk = chunk
+        self._cache: dict = {}     # (kind, ICPParams) -> jitted executable
+        self._traces: list = []    # (kind, ICPParams, shapes) per (re)trace
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def trace_count(self) -> int:
+        """Number of times any cached executable was (re)traced — i.e.
+        compiled. Stable across repeated same-shape calls; grows by one per
+        new (kind, params, shape-bucket) combination."""
+        return len(self._traces)
+
+    @property
+    def traces(self) -> tuple:
+        return tuple(self._traces)
+
+    def setup(self) -> None:
+        """Backend init hook (the paper's .xclbin load). Idempotent."""
+        _ = jax.devices()
+
+    # -- subclass hooks ----------------------------------------------------
+    def _nn_fn(self, params: ICPParams) -> Callable | None:
+        """Correspondence searcher ``(src, dst) -> (d2, idx)``; None means
+        the default XLA brute force inside ``core.icp``."""
+        return None
+
+    def _note_trace(self, kind: str, params: ICPParams, *shapes) -> None:
+        self._traces.append((kind, params, shapes))
+
+    def _build_single(self, params: ICPParams):
+        nn_fn = self._nn_fn(params)
+
+        def run(src, dst, T0, sv, dv):
+            self._note_trace("single", params, src.shape, dst.shape)
+            return icp(src, dst, params, T0, nn_fn=nn_fn,
+                       src_valid=sv, dst_valid=dv)
+
+        return jax.jit(run)
+
+    def _build_batch(self, params: ICPParams):
+        nn_fn = self._nn_fn(params)
+
+        def run(src_b, dst_b, T0, sv, dv):
+            self._note_trace("batch", params, src_b.shape, dst_b.shape)
+            return icp_batch(src_b, dst_b, params, T0, nn_fn=nn_fn,
+                             src_valid=sv, dst_valid=dv)
+
+        return jax.jit(run)
+
+    def _executable(self, kind: str, params: ICPParams):
+        key = (kind, params)
+        fn = self._cache.get(key)
+        if fn is None:
+            build = self._build_single if kind == "single" else self._build_batch
+            fn = build(params)
+            self._cache[key] = fn
+        return fn
+
+    def _default_params(self, params: ICPParams | None) -> ICPParams:
+        if params is None:
+            return ICPParams(chunk=self._chunk)
+        return params
+
+    # -- public API --------------------------------------------------------
+    def register(self, source, target, params: ICPParams | None = None,
+                 initial_transform=None, *, bucket: bool = True) -> ICPResult:
+        """Register one (N,3) source onto one (M,3) target.
+
+        With ``bucket=True`` (default) both clouds are padded up to the next
+        shape bucket before hitting the jitted executable, so a stream of
+        slightly-varying frame sizes reuses one compilation per bucket
+        instead of one per exact size. Padding happens device-side — an
+        already-bucket-sized device array passes through with zero copies.
+        """
+        params = self._default_params(params)
+        src = jnp.asarray(source, dtype=jnp.float32)
+        dst = jnp.asarray(target, dtype=jnp.float32)
+        sv = dv = None
+        if bucket:
+            n_b, m_b = bucket_size(src.shape[0]), bucket_size(dst.shape[0])
+            if (src.shape[0], dst.shape[0]) != (n_b, m_b):
+                src, sv = _pad_device(src, n_b)
+                dst, dv = _pad_device(dst, m_b)
+        fn = self._executable("single", params)
+        return fn(src, dst, initial_transform, sv, dv)
+
+    def register_batch(self, sources, targets,
+                       params: ICPParams | None = None, *,
+                       src_valid=None, dst_valid=None,
+                       initial_transforms=None) -> ICPResult:
+        """Register a (B,N,3) source batch onto a (B,M,3) target batch in a
+        single compiled program. Masks come from ``collate_pairs``; every
+        ``ICPResult`` leaf gains a leading batch axis."""
+        fn = self._executable("batch", self._default_params(params))
+        return fn(jnp.asarray(sources, dtype=jnp.float32),
+                  jnp.asarray(targets, dtype=jnp.float32),
+                  initial_transforms,
+                  None if src_valid is None else jnp.asarray(src_valid),
+                  None if dst_valid is None else jnp.asarray(dst_valid))
+
+    def register_pairs(self, pairs, params: ICPParams | None = None,
+                       initial_transforms=None):
+        """Collate variable-size [(src, dst), ...] and register as one batch.
+
+        Returns (ICPResult, CollatedBatch) — the batch carries the true
+        per-frame sizes for unpadding downstream.
+        """
+        from repro.data.collate import collate_pairs
+        batch = collate_pairs(pairs)
+        res = self.register_batch(batch.src, batch.dst, params,
+                                  src_valid=batch.src_valid,
+                                  dst_valid=batch.dst_valid,
+                                  initial_transforms=initial_transforms)
+        return res, batch
+
+
+class XLAEngine(RegistrationEngine):
+    """Default engine: chunked brute-force NN in pure XLA (runs anywhere)."""
+
+    name = "xla"
+    # Base behaviour is exactly this engine; _nn_fn -> None selects the
+    # chunked searcher in core.icp with native dst_valid masking.
+
+
+class PallasEngine(RegistrationEngine):
+    """TPU Pallas kernel engine (interpret mode off-TPU).
+
+    The target augmentation is built once per frame at trace scope via
+    ``kernels.ops.resident_nn_fn`` — each ICP iteration only augments the
+    small source cloud and runs the MXU kernel against the resident target.
+    """
+
+    name = "pallas"
+
+    def __init__(self, chunk: int = 2048, bn: int = 512, bm: int = 1024,
+                 interpret: bool | None = None):
+        super().__init__(chunk)
+        self._bn, self._bm = bn, bm
+        self._interpret = interpret  # None: auto (interpret unless on TPU)
+
+    def _interp(self) -> bool:
+        if self._interpret is None:
+            return jax.default_backend() != "tpu"
+        return self._interpret
+
+    def _build_single(self, params: ICPParams):
+        from repro.kernels.ops import resident_nn_fn
+        interpret = self._interp()
+
+        def run(src, dst, T0, sv, dv):
+            self._note_trace("single", params, src.shape, dst.shape)
+            dst = _mask_invalid(dst, dv)
+            nn_fn = resident_nn_fn(dst, bn=self._bn, bm=self._bm,
+                                   interpret=interpret)
+            return icp(src, dst, params, T0, nn_fn=nn_fn, src_valid=sv)
+
+        return jax.jit(run)
+
+    def _build_batch(self, params: ICPParams):
+        from repro.kernels.ops import resident_nn_fn
+        interpret = self._interp()
+
+        def run(src_b, dst_b, T0, sv, dv):
+            self._note_trace("batch", params, src_b.shape, dst_b.shape)
+            if T0 is None:
+                T0 = jnp.broadcast_to(jnp.eye(4, dtype=src_b.dtype),
+                                      (src_b.shape[0], 4, 4))
+
+            def one(src, dst, T0_, sv_, dv_):
+                dst = _mask_invalid(dst, dv_)
+                nn_fn = resident_nn_fn(dst, bn=self._bn, bm=self._bm,
+                                       interpret=interpret)
+                return icp_fixed_iterations(src, dst, params, T0_,
+                                            nn_fn=nn_fn, src_valid=sv_)
+
+            return jax.vmap(one)(src_b, dst_b, T0, sv, dv)
+
+        return jax.jit(run)
+
+
+class DistributedEngine(RegistrationEngine):
+    """Fleet-mode engine: frames shard over "data", targets over "model".
+
+    Wraps ``core.distributed.batched_icp_sharded`` on a mesh spanning the
+    available devices (or a caller-supplied mesh). Warm starts are applied
+    by pre-transforming sources and composing the result (mathematically
+    identical to an initial transform).
+    """
+
+    name = "distributed"
+
+    def __init__(self, chunk: int = 2048, mesh=None,
+                 frame_axes=("data",), target_axes=("model",)):
+        super().__init__(chunk)
+        self._mesh = mesh
+        self._frame_axes = tuple(frame_axes)
+        self._target_axes = tuple(target_axes)
+
+    def _get_mesh(self):
+        if self._mesh is None:
+            from jax.sharding import Mesh
+            devs = np.array(jax.devices())
+            self._mesh = Mesh(devs.reshape(len(devs), 1), ("data", "model"))
+        return self._mesh
+
+    def setup(self) -> None:
+        self._get_mesh()
+
+    def _build_batch(self, params: ICPParams):
+        from repro.core.distributed import batched_icp_sharded
+        mesh = self._get_mesh()
+        frame_div = 1
+        for ax in self._frame_axes:
+            frame_div *= mesh.shape[ax]
+
+        def run(src_b, dst_b, T0, sv, dv):
+            self._note_trace("batch", params, src_b.shape, dst_b.shape)
+            b = src_b.shape[0]
+            # The frame axis must divide the mesh's frame_axes extent; pad
+            # by repeating frame 0 and slice the results back off.
+            pad = (-b) % frame_div
+
+            def rep(x):
+                if x is None or pad == 0:
+                    return x
+                return jnp.concatenate(
+                    [x, jnp.repeat(x[:1], pad, axis=0)], axis=0)
+
+            src_b, dst_b, T0, sv, dv = map(rep, (src_b, dst_b, T0, sv, dv))
+            dst_b = _mask_invalid(dst_b, dv)
+            if T0 is not None:
+                # warm start: register T0(src) and compose T_result @ T0.
+                R, t = T0[:, :3, :3], T0[:, :3, 3]
+                src_b = jnp.einsum("bnj,bij->bni", src_b, R) + t[:, None, :]
+            res = batched_icp_sharded(mesh, src_b, dst_b, params,
+                                      frame_axes=self._frame_axes,
+                                      target_axes=self._target_axes,
+                                      src_valid=sv)
+            if T0 is not None:
+                res = res._replace(T=jnp.einsum("bij,bjk->bik", res.T, T0))
+            if pad:
+                res = jax.tree_util.tree_map(lambda x: x[:b], res)
+            return res
+
+        return jax.jit(run)
+
+    def _build_single(self, params: ICPParams):
+        batch_fn = self._build_batch(params)
+
+        def run(src, dst, T0, sv, dv):
+            res = batch_fn(src[None], dst[None],
+                           None if T0 is None else T0[None],
+                           None if sv is None else sv[None],
+                           None if dv is None else dv[None])
+            return jax.tree_util.tree_map(lambda x: x[0], res)
+
+        return run  # batch_fn is already jitted
+
+
+class CallableEngine(RegistrationEngine):
+    """Adapter for a user-supplied ``nn_fn(src, dst) -> (d2, idx)``."""
+
+    name = "callable"
+
+    def __init__(self, nn_fn: Callable, chunk: int = 2048):
+        super().__init__(chunk)
+        self._user_nn_fn = nn_fn
+
+    def _nn_fn(self, params: ICPParams) -> Callable:
+        return self._user_nn_fn
+
+
+# -- registry ---------------------------------------------------------------
+_ENGINES: dict[str, Callable[..., RegistrationEngine]] = {}
+_SHARED: dict = {}  # (name, sorted kwargs) -> engine instance
+
+
+def register_engine(name: str, factory: Callable[..., RegistrationEngine]):
+    """Register an engine factory under ``name`` (last write wins)."""
+    _ENGINES[name] = factory
+    _SHARED.clear()
+    return factory
+
+
+def available_engines() -> tuple[str, ...]:
+    return tuple(sorted(_ENGINES))
+
+
+def get_engine(spec, **kwargs) -> RegistrationEngine:
+    """Resolve an engine spec: a RegistrationEngine instance (passed
+    through), a registered name, or a bare ``nn_fn`` callable.
+
+    Named engines with hashable kwargs are process-wide singletons, so the
+    compilation caches are shared: constructing ``FppsICP()`` per frame
+    (the PCL-style pattern the drivers use) reuses one compiled executable
+    instead of recompiling per instance. Instantiate the engine class
+    directly for a private cache.
+    """
+    if isinstance(spec, RegistrationEngine):
+        return spec
+    if isinstance(spec, str):
+        try:
+            factory = _ENGINES[spec]
+        except KeyError:
+            raise ValueError(
+                f"unknown engine {spec!r}; available: {available_engines()}"
+            ) from None
+        try:
+            key = (spec, tuple(sorted(kwargs.items())))
+            engine = _SHARED.get(key)
+            if engine is None:
+                engine = _SHARED[key] = factory(**kwargs)
+            return engine
+        except TypeError:  # unhashable kwarg (e.g. an explicit mesh)
+            return factory(**kwargs)
+    if callable(spec):
+        return CallableEngine(spec, **kwargs)
+    raise TypeError(f"engine spec must be a name, callable or "
+                    f"RegistrationEngine, got {type(spec).__name__}")
+
+
+register_engine("xla", XLAEngine)
+register_engine("pallas", PallasEngine)
+register_engine("distributed", DistributedEngine)

@@ -41,6 +41,34 @@ def nn_search_pallas(src: jax.Array, dst: jax.Array,
     return jnp.maximum(d2[:n], 0.0), idx[:n]
 
 
+def resident_nn_fn(dst: jax.Array, *, bn: int = 512, bm: int = 1024,
+                   interpret: bool = False):
+    """In-trace resident-target searcher for use *inside* a jitted program.
+
+    Builds the (8, M') augmented target once at trace position — outside the
+    ICP iteration scan/while body that the returned closure is called from —
+    so the compiled program augments the target once per frame and only the
+    small source cloud per iteration (the BRAM-resident analogue,
+    DESIGN.md §2). The closure matches the ``core.icp`` ``nn_fn(src, dst)``
+    contract but ignores its second argument in favour of the resident
+    augmentation.
+
+    Padded/invalid target rows must already carry far-sentinel coordinates
+    (as ``repro.data.collate`` produces) so they cannot win the argmin.
+    """
+    m = dst.shape[0]
+    dst_aug = ref.augment_target(dst, pad_to=_round_up(m, bm))
+
+    def nn_fn(src: jax.Array, _target=None):
+        n = src.shape[0]
+        src_aug = ref.augment_source(src, pad_to=_round_up(n, bn))
+        d2, idx = nn_search_kernel(src_aug, dst_aug, bn=bn, bm=bm,
+                                   interpret=interpret)
+        return jnp.maximum(d2[:n], 0.0), idx[:n]
+
+    return nn_fn
+
+
 def make_frame_engine(dst: jax.Array, *, bn: int = 512, bm: int = 1024,
                       interpret: bool = False):
     """Pre-augment a target frame once; return nn_fn(src, T) for ICP loops.

@@ -1,8 +1,13 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if __name__ == "__main__":
+    # Placeholder 512-device fleet for the dry-run CLI only. Guarded so that
+    # *importing* this module (test_partition_rules, breakdown) never forces
+    # the flag onto an in-process suite — conftest.py promises smoke tests
+    # and benchmarks see the real device count.
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-# NOTE: the two lines above MUST run before any jax-importing module — jax
-# locks the device count at first init. Everything else follows.
+# NOTE: when run as the CLI, the lines above MUST execute before any
+# jax-importing module — jax locks the device count at first init.
 import argparse          # noqa: E402
 import dataclasses       # noqa: E402
 import json              # noqa: E402
@@ -72,10 +77,13 @@ def _rules_for(mesh, global_batch: int, overrides: dict | None = None,
     return rules
 
 
+from repro.compat import cost_analysis as _cost_analysis  # noqa: E402
+
+
 def _collect(compiled, label: str, n_devices: int, cfg=None, shape=None,
              model_flops_override=None) -> dict:
     mem = compiled.memory_analysis()
-    naive = compiled.cost_analysis() or {}
+    naive = _cost_analysis(compiled)
     hlo = compiled.as_text()
     cost = analyze_hlo(hlo)
     terms = roofline_terms(cost, cfg, shape, n_devices,
@@ -195,7 +203,7 @@ def _lower_lm_cell(arch: str, shape_name: str, mesh_name: str,
     out["rules"] = {k: list(v) if isinstance(v, tuple) else v
                     for k, v in rules.items()}
     print(compiled.memory_analysis())
-    ca = compiled.cost_analysis()
+    ca = _cost_analysis(compiled)
     print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
     return out
 

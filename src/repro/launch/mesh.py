@@ -6,7 +6,7 @@ XLA_FLAGS before any device query, and tests must keep seeing 1 CPU device.
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh as _make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,15 +15,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     ``pod`` axis is the DCN/cross-pod dimension."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for subprocess tests (8 host devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def batch_axes_for(mesh, global_batch: int):

@@ -55,10 +55,8 @@ def main(argv=None):
     devices = jax.devices()
     mesh = None
     if len(devices) > 1:
-        import numpy as np
-        n = len(devices)
-        mesh = jax.make_mesh((n,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((len(devices),), ("data",))
 
     state = ts.init_state(jax.random.PRNGKey(args.seed), cfg, opt)
     start_step = 0

@@ -31,10 +31,7 @@ import jax.numpy as jnp
 from repro.models import layers as L
 from repro.models.moe import MoEConfig, capacity, route
 
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.compat import shard_map
 
 
 def _local_dispatch(flat, weights, idx, e: int, c: int):

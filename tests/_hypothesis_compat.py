@@ -1,0 +1,46 @@
+"""Optional-hypothesis shim (ISSUE 1 satellite).
+
+``hypothesis`` is an optional dependency of the test suite: property-based
+tests use it, deterministic tests don't. Importing it unconditionally made
+*collection* fail on hosts without it, killing whole modules' deterministic
+coverage. This shim degrades gracefully: when hypothesis is absent the
+``@hypothesis.given(...)`` decorator turns into ``pytest.mark.skip``, so the
+property tests show up as skipped and everything else still runs.
+
+Usage in a test module::
+
+    from _hypothesis_compat import hypothesis, st      # (+ hnp if needed)
+"""
+from __future__ import annotations
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    try:
+        import hypothesis.extra.numpy as hnp
+    except ImportError:  # pragma: no cover - hypothesis without numpy extra
+        hnp = None
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    class _StrategyStub:
+        """Any ``st.foo(...)`` / ``hnp.foo(...)`` call returns a placeholder;
+        the enclosing test is skipped before the value is ever used."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    class _HypothesisStub:
+        @staticmethod
+        def given(*args, **kwargs):
+            return pytest.mark.skip(reason="hypothesis not installed")
+
+        @staticmethod
+        def settings(*args, **kwargs):
+            return lambda fn: fn
+
+    hypothesis = _HypothesisStub()
+    st = _StrategyStub()
+    hnp = _StrategyStub()
+    HAVE_HYPOTHESIS = False

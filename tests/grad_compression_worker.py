@@ -14,15 +14,13 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro.compat import make_mesh, shard_map  # noqa: E402
 from repro.optim.compression import (compressed_grad_reduce,  # noqa: E402
                                      init_error_feedback)
 
-shard_map = jax.shard_map
-
 
 def main():
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
 
     # --- 1. single reduction approximates the exact mean ------------------
     key = jax.random.PRNGKey(0)

@@ -5,7 +5,8 @@ from repro.launch.partition import partitioning
 from repro.models.moe import MoEConfig, moe_init, moe_forward, moe_forward_dense
 from repro.models.moe_ep import moe_forward_ep
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = MoEConfig(d_model=32, n_experts=8, top_k=2, d_expert=16, n_shared_experts=1, capacity_factor=8.0)
 params = moe_init(jax.random.PRNGKey(0), cfg)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32)) * 0.5  # B=4 over data2, S=16 over model4

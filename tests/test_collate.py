@@ -1,0 +1,71 @@
+"""Shape-bucket collation: padding, masks, bucket ladder."""
+import numpy as np
+import pytest
+
+from repro.data.collate import (DEFAULT_BUCKETS, PAD_SENTINEL, CollatedBatch,
+                                bucket_size, collate_pairs, pad_cloud)
+
+
+def test_bucket_ladder_properties():
+    prev = 0
+    for b in DEFAULT_BUCKETS:
+        assert b > prev, "ladder must be strictly increasing"
+        assert b % 128 == 0, "buckets must be Pallas tile-aligned"
+        prev = b
+    for n in (1, 255, 256, 257, 4096, 5000, 131072):
+        b = bucket_size(n)
+        assert b >= n
+    # ratio between consecutive rungs bounds padding waste.
+    ratios = [b / a for a, b in zip(DEFAULT_BUCKETS, DEFAULT_BUCKETS[1:])]
+    assert max(ratios) <= 2.0
+
+
+def test_bucket_size_beyond_ladder_rounds_to_top_multiple():
+    top = DEFAULT_BUCKETS[-1]
+    assert bucket_size(top + 1) == 2 * top
+    assert bucket_size(3 * top) == 3 * top
+
+
+def test_bucket_size_rejects_empty():
+    with pytest.raises(ValueError):
+        bucket_size(0)
+
+
+def test_pad_cloud_contents_and_mask():
+    pts = np.arange(15, dtype=np.float32).reshape(5, 3)
+    padded, valid = pad_cloud(pts, 8)
+    assert padded.shape == (8, 3) and valid.shape == (8,)
+    np.testing.assert_array_equal(padded[:5], pts)
+    assert valid[:5].all() and not valid[5:].any()
+    # Padding is a finite far sentinel, not inf/NaN (matmul-expansion safe).
+    assert np.all(padded[5:] == PAD_SENTINEL)
+    assert np.isfinite(padded).all()
+
+
+def test_pad_cloud_rejects_overflow():
+    with pytest.raises(ValueError):
+        pad_cloud(np.zeros((10, 3), np.float32), 8)
+
+
+def test_collate_mixed_sizes_share_buckets():
+    rng = np.random.default_rng(0)
+    pairs = [(rng.normal(size=(n, 3)).astype(np.float32),
+              rng.normal(size=(m, 3)).astype(np.float32))
+             for n, m in [(100, 300), (250, 260), (90, 400)]]
+    batch = collate_pairs(pairs)
+    assert isinstance(batch, CollatedBatch)
+    n_b, m_b = bucket_size(250), bucket_size(400)
+    assert batch.src.shape == (3, n_b, 3)
+    assert batch.dst.shape == (3, m_b, 3)
+    assert batch.src_sizes == (100, 250, 90)
+    assert batch.dst_sizes == (300, 260, 400)
+    for i, (s, d) in enumerate(pairs):
+        assert batch.src_valid[i].sum() == s.shape[0]
+        assert batch.dst_valid[i].sum() == d.shape[0]
+        np.testing.assert_array_equal(batch.src[i, :s.shape[0]], s)
+        np.testing.assert_array_equal(batch.dst[i, :d.shape[0]], d)
+
+
+def test_collate_rejects_empty_list():
+    with pytest.raises(ValueError):
+        collate_pairs([])

@@ -1,0 +1,207 @@
+"""RegistrationEngine layer: registry semantics, persistent-compile
+regression, and batch-vs-loop equivalence (including mixed-size pairs
+through the bucketing path)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FppsICP, ICPParams, available_engines, get_engine,
+                        icp, icp_batch, random_rigid_transform,
+                        transform_points)
+from repro.core.engine import CallableEngine, RegistrationEngine, XLAEngine
+from repro.core.nn_search import nn_search
+from repro.data.collate import collate_pairs
+
+PARAMS = ICPParams(max_iterations=15, chunk=256)
+
+
+def _pair(key, n=220, m=340):
+    k1, k2, k3 = jax.random.split(key, 3)
+    dst = jax.random.uniform(k1, (m, 3), minval=-10, maxval=10)
+    T_gt = random_rigid_transform(k2, max_angle=0.1, max_translation=0.3)
+    src = transform_points(jnp.linalg.inv(T_gt), dst)[:n]
+    src = src + 0.002 * jax.random.normal(k3, src.shape)
+    return np.asarray(src), np.asarray(dst), np.asarray(T_gt)
+
+
+# -- registry ---------------------------------------------------------------
+
+def test_registry_lists_builtin_engines():
+    names = available_engines()
+    for name in ("xla", "pallas", "distributed"):
+        assert name in names
+
+
+def test_unknown_engine_raises():
+    with pytest.raises(ValueError, match="unknown engine"):
+        get_engine("fpga")
+    with pytest.raises(ValueError, match="unknown engine"):
+        FppsICP(engine="not-an-engine")
+
+
+def test_bad_engine_type_raises():
+    with pytest.raises(TypeError):
+        get_engine(42)
+
+
+def test_callable_engine_accepted():
+    """A bare nn_fn(src, dst) -> (d2, idx) still works as an engine."""
+    calls = []
+
+    def my_nn(src, dst):
+        calls.append(1)
+        return nn_search(src, dst, chunk=128)
+
+    eng = get_engine(my_nn)
+    assert isinstance(eng, CallableEngine)
+    src, dst, T_gt = _pair(jax.random.PRNGKey(0))
+    res = eng.register(src, dst, PARAMS)
+    ref = icp(jnp.asarray(src), jnp.asarray(dst), PARAMS)
+    np.testing.assert_allclose(np.asarray(res.T), np.asarray(ref.T), atol=1e-4)
+    assert calls, "user nn_fn was never traced"
+
+
+def test_engine_instance_passes_through():
+    eng = get_engine("xla")
+    assert get_engine(eng) is eng
+    assert isinstance(eng, RegistrationEngine)
+
+
+def test_named_engines_are_shared_singletons():
+    """Same name+kwargs -> same instance, so FppsICP-per-frame reuses one
+    compiled executable; direct class instantiation stays private."""
+    assert get_engine("xla", chunk=256) is get_engine("xla", chunk=256)
+    assert get_engine("xla", chunk=256) is not get_engine("xla", chunk=512)
+    assert XLAEngine(chunk=256) is not XLAEngine(chunk=256)
+
+
+# -- persistent jit cache / recompile regression ----------------------------
+
+@pytest.mark.parametrize("engine_kwargs", [
+    dict(engine="xla"),
+    dict(engine="pallas", bn=64, bm=128),
+])
+def test_no_recompile_across_aligns(engine_kwargs):
+    """ISSUE 1 regression: repeated align() calls must reuse one compiled
+    executable — the old FppsICP built a fresh unhashable partial per call.
+
+    Engines resolved by name are shared singletons, so we assert the trace
+    count *delta*: +1 on the first align of a fresh params/shape combo,
+    +0 on every align after — including from a brand-new FppsICP instance
+    (the PCL construct-per-frame pattern)."""
+    src, dst, _ = _pair(jax.random.PRNGKey(1))
+
+    def make():
+        reg = FppsICP(chunk=256, **engine_kwargs)
+        reg.setMaxIterationCount(17)  # unique params: fresh cache entry
+        reg.setInputSource(src)
+        reg.setInputTarget(dst)
+        return reg
+
+    reg = make()
+    before = reg.engine.trace_count
+    T1 = reg.align()
+    assert reg.engine.trace_count == before + 1
+    for _ in range(3):
+        T2 = reg.align()
+    # ... and a second FppsICP with the same config shares the executable.
+    T2 = make().align()
+    assert reg.engine.trace_count == before + 1, (
+        f"align() recompiled: {reg.engine.traces}")
+    np.testing.assert_allclose(T1, T2, atol=1e-6)
+
+
+def test_same_bucket_sizes_share_compile():
+    """Slightly different cloud sizes land in one shape bucket -> one trace.
+
+    Direct instantiation gives a private cache, so counts start at zero."""
+    eng = XLAEngine(chunk=256)
+    for n, m in [(200, 300), (220, 340), (190, 310)]:  # all pad to (256, 384)
+        src, dst, _ = _pair(jax.random.PRNGKey(n), n=n, m=m)
+        eng.register(src, dst, PARAMS)
+    assert eng.trace_count == 1, eng.traces
+
+
+def test_different_params_get_separate_cache_entries():
+    eng = XLAEngine(chunk=256)
+    src, dst, _ = _pair(jax.random.PRNGKey(2))
+    eng.register(src, dst, PARAMS)
+    eng.register(src, dst, PARAMS._replace(max_iterations=5))
+    assert eng.trace_count == 2
+
+
+def test_engine_chunk_default_feeds_params():
+    """get_engine(..., chunk=...) is the default ICPParams chunk when the
+    caller passes no explicit params."""
+    eng = XLAEngine(chunk=123)
+    assert eng._default_params(None).chunk == 123
+    assert eng._default_params(PARAMS).chunk == PARAMS.chunk
+
+
+# -- batch vs loop equivalence ----------------------------------------------
+
+def test_icp_batch_matches_per_pair_icp():
+    """Same-size pairs, no padding: icp_batch == per-pair icp to tolerance."""
+    pairs = [_pair(k) for k in jax.random.split(jax.random.PRNGKey(3), 4)]
+    src_b = jnp.stack([jnp.asarray(s) for s, _, _ in pairs])
+    dst_b = jnp.stack([jnp.asarray(d) for _, d, _ in pairs])
+    res = icp_batch(src_b, dst_b, PARAMS)
+    for i, (s, d, T_gt) in enumerate(pairs):
+        single = icp(jnp.asarray(s), jnp.asarray(d), PARAMS)
+        np.testing.assert_allclose(np.asarray(res.T[i]),
+                                   np.asarray(single.T), atol=1e-4)
+        np.testing.assert_allclose(float(res.rmse[i]), float(single.rmse),
+                                   atol=1e-5)
+        # and both recover the ground truth
+        np.testing.assert_allclose(np.asarray(res.T[i]), T_gt, atol=0.05)
+
+
+@pytest.mark.parametrize("engine_kwargs", [
+    dict(spec="xla"),
+    dict(spec="pallas", bn=64, bm=128),
+    dict(spec="distributed"),
+])
+def test_register_batch_mixed_sizes_matches_loop(engine_kwargs):
+    """Mixed-size pairs through collate bucketing must match the unpadded
+    per-pair loop on every engine."""
+    kwargs = dict(engine_kwargs)
+    spec = kwargs.pop("spec")
+    sizes = [(180, 300), (220, 340), (150, 260)]
+    pairs = [_pair(k, n=n, m=m) for k, (n, m) in
+             zip(jax.random.split(jax.random.PRNGKey(4), len(sizes)), sizes)]
+    batch = collate_pairs([(s, d) for s, d, _ in pairs])
+    eng = get_engine(spec, chunk=256, **kwargs)
+    res = eng.register_batch(batch.src, batch.dst, PARAMS,
+                             src_valid=batch.src_valid,
+                             dst_valid=batch.dst_valid)
+    for i, (s, d, _) in enumerate(pairs):
+        single = icp(jnp.asarray(s), jnp.asarray(d), PARAMS)
+        np.testing.assert_allclose(np.asarray(res.T[i]),
+                                   np.asarray(single.T), atol=1e-4)
+        # masks keep the inlier fraction w.r.t. the true point count
+        assert float(res.inlier_frac[i]) == pytest.approx(
+            float(single.inlier_frac), abs=1e-5)
+
+
+def test_register_pairs_collates_and_registers():
+    pairs = [_pair(k, n=n, m=m) for k, (n, m) in
+             zip(jax.random.split(jax.random.PRNGKey(5), 2),
+                 [(128, 200), (200, 256)])]
+    eng = get_engine("xla", chunk=256)
+    res, batch = eng.register_pairs([(s, d) for s, d, _ in pairs], PARAMS)
+    assert batch.src_sizes == (128, 200)
+    for i, (_, _, T_gt) in enumerate(pairs):
+        np.testing.assert_allclose(np.asarray(res.T[i]), T_gt, atol=0.05)
+
+
+def test_register_batch_warm_start():
+    pairs = [_pair(k) for k in jax.random.split(jax.random.PRNGKey(6), 2)]
+    src_b = jnp.stack([jnp.asarray(s) for s, _, _ in pairs])
+    dst_b = jnp.stack([jnp.asarray(d) for _, d, _ in pairs])
+    T0 = jnp.stack([jnp.asarray(T) for _, _, T in pairs])  # perfect start
+    eng = get_engine("xla", chunk=256)
+    res = eng.register_batch(src_b, dst_b,
+                             PARAMS._replace(max_iterations=3),
+                             initial_transforms=T0)
+    np.testing.assert_allclose(np.asarray(res.T), np.asarray(T0), atol=0.02)

@@ -1,7 +1,6 @@
 """MoE routing + dispatch tests: sorted dispatch vs dense reference,
 router semantics, capacity-drop accounting."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,6 +1,5 @@
 """XLA brute-force NN search vs naive reference."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,7 +1,6 @@
 """SSD (Mamba-2) and RG-LRU unit tests: chunked == naive recurrence,
 streaming == full, padding exactness."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

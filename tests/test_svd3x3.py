@@ -1,7 +1,5 @@
 """svd3x3: reconstruction, orthogonality, singular-value parity, degeneracy."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+from _hypothesis_compat import hnp, hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,6 +1,5 @@
 """SE(3) utilities + Kabsch estimation properties."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
