@@ -1,0 +1,28 @@
+# FPPS reproduction — tier-1 verify + bench smoke in one command.
+#
+#   make check       fast suite (slow-marked tests excluded) + bench smoke
+#   make test        fast test suite (default dev loop)
+#   make test-all    full tier-1 suite, including slow subprocess tests
+#   make bench       full benchmark harness (writes BENCH_*.json)
+#   make bench-smoke every benchmark entry point in smoke mode
+#
+# pytest picks up pythonpath/markers from pyproject.toml; PYTHONPATH is
+# still exported so `python -m benchmarks.run` resolves `repro` too.
+
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: check test test-all bench bench-smoke
+
+check: test bench-smoke
+
+test:
+	python -m pytest -q -m "not slow"
+
+test-all:
+	python -m pytest -q
+
+bench:
+	python -m benchmarks.run
+
+bench-smoke:
+	python -m benchmarks.run --quick

@@ -8,6 +8,8 @@
   roofline -> roofline_report        (dry-run roofline summaries)
   throughput -> registration_throughput (looped vs batched frames/sec;
                                          also writes BENCH_throughput.json)
+  nn_sweep -> nn_sweep               (brute vs grid-bucketed NN sweep;
+                                         also writes BENCH_nn.json)
 
 ``--quick`` runs every suite in smoke mode (reduced scenes, 2 frames,
 fewer iterations) so CI can exercise all entry points in seconds.
@@ -18,7 +20,7 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (kernel_resources, power_efficiency,
+from benchmarks import (kernel_resources, nn_sweep, power_efficiency,
                         registration_accuracy, registration_latency,
                         registration_throughput, roofline_report)
 from benchmarks.common import QUICK_SCENE, emit
@@ -30,6 +32,7 @@ SUITES = {
     "power": power_efficiency.run,
     "roofline": roofline_report.run,
     "throughput": registration_throughput.run,
+    "nn_sweep": nn_sweep.run,
 }
 
 # Smoke-mode kwargs per suite (reduced scenes, 2 frames, short loops).
@@ -40,6 +43,8 @@ QUICK_KWARGS = {
     "power": dict(n_seqs=2, samples=512, iters=10, scene=QUICK_SCENE),
     "throughput": dict(quick=True),
 }
+# Suites whose smoke mode is a different entry point, not just kwargs.
+QUICK_SUITES = {"nn_sweep": nn_sweep.run_quick}
 
 
 def main(argv=None) -> None:
@@ -53,6 +58,8 @@ def main(argv=None) -> None:
         if args.only and name != args.only:
             continue
         kwargs = QUICK_KWARGS.get(name, {}) if args.quick else {}
+        if args.quick and name in QUICK_SUITES:
+            fn, kwargs = QUICK_SUITES[name], {}
         try:
             emit(fn(**kwargs))
         except Exception as e:  # report and continue; fail at the end

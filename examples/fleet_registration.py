@@ -26,7 +26,7 @@ def main(argv=None):
     ap.add_argument("--frames", type=int, default=4)
     ap.add_argument("--points", type=int, default=1024)
     ap.add_argument("--engine", default="xla",
-                    choices=["xla", "pallas", "distributed"])
+                    choices=["xla", "pallas", "distributed", "pyramid"])
     args = ap.parse_args(argv)
 
     keys = jax.random.split(jax.random.PRNGKey(0), args.frames)

@@ -28,7 +28,7 @@ def main(argv=None):
     ap.add_argument("--frames", type=int, default=8)
     ap.add_argument("--samples", type=int, default=2048)
     ap.add_argument("--engine", default="xla",
-                    choices=["xla", "pallas", "distributed"])
+                    choices=["xla", "pallas", "distributed", "pyramid"])
     args = ap.parse_args(argv)
 
     cfg = SceneConfig(n_ground=9000, n_walls=6000, n_poles=1800,

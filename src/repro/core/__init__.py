@@ -5,6 +5,8 @@ from repro.core.engine import (RegistrationEngine, available_engines,
 from repro.core.icp import (ICPParams, ICPResult, icp, icp_batch,
                             icp_fixed_iterations)
 from repro.core.nn_search import nn_search, pairwise_sq_dists
+from repro.core.nn_search_grid import grid_nn_fn, nn_search_grid
+from repro.core.pyramid import PyramidEngine, icp_pyramid
 from repro.core.svd3x3 import svd3x3
 from repro.core.transform import (estimate_rigid_transform, make_transform,
                                   random_rigid_transform, transform_points)
@@ -12,7 +14,8 @@ from repro.core.transform import (estimate_rigid_transform, make_transform,
 __all__ = [
     "FppsICP", "ICPParams", "ICPResult", "RegistrationEngine",
     "available_engines", "get_engine", "register_engine",
-    "icp", "icp_batch", "icp_fixed_iterations",
+    "icp", "icp_batch", "icp_fixed_iterations", "icp_pyramid",
+    "PyramidEngine", "grid_nn_fn", "nn_search_grid",
     "nn_search", "pairwise_sq_dists", "svd3x3", "estimate_rigid_transform",
     "make_transform", "random_rigid_transform", "transform_points",
 ]

@@ -36,7 +36,8 @@ class FppsICP:
     def __init__(self, engine: str | RegistrationEngine = "xla",
                  chunk: int = 2048, **engine_kwargs):
         """engine: 'xla' (default), 'pallas' (TPU kernel; interpret on CPU),
-        'distributed', a ``RegistrationEngine`` instance, or a callable
+        'distributed', 'pyramid' (coarse-to-fine + grid NN), a
+        ``RegistrationEngine`` instance, or a callable
         nn_fn(src, dst) -> (d2, idx)."""
         self._engine = get_engine(engine, chunk=chunk, **engine_kwargs)
         self._source: jax.Array | None = None

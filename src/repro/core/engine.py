@@ -393,3 +393,8 @@ def get_engine(spec, **kwargs) -> RegistrationEngine:
 register_engine("xla", XLAEngine)
 register_engine("pallas", PallasEngine)
 register_engine("distributed", DistributedEngine)
+
+# Imported for its side effect: registers the "pyramid" engine. Lives in
+# its own module (it pulls in the voxel/grid-NN stack); bottom import keeps
+# the pyramid -> engine -> pyramid cycle harmless.
+from repro.core import pyramid as _pyramid  # noqa: E402,F401

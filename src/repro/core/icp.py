@@ -87,10 +87,13 @@ def _default_correspond_fn(target: jax.Array, params: ICPParams,
                            nn_fn: Callable | None,
                            dst_valid: jax.Array | None = None) -> Callable:
     if nn_fn is None:
+        # Fused winner gather: the exact-d2 epilogue inside nn_search
+        # already gathers dst[idx], so ask for the points and skip the
+        # second jnp.take over the target that the generic path needs.
         def nn_fn(s, t):
             return nn_search(s, t, chunk=params.chunk,
                              score_dtype=params.score_dtype,
-                             dst_valid=dst_valid)
+                             dst_valid=dst_valid, return_points=True)
     elif dst_valid is not None:
         # Custom searchers (Pallas kernel, user callables) take only
         # (src, dst): mask padded target rows by moving them far outside any
@@ -99,7 +102,12 @@ def _default_correspond_fn(target: jax.Array, params: ICPParams,
                            jnp.asarray(1e6, target.dtype))
 
     def correspond(src_t):
-        d2, idx = nn_fn(src_t, target)
+        # Searchers may return (d2, idx) or the fused (d2, idx, points).
+        out = nn_fn(src_t, target)
+        if len(out) == 3:
+            d2, _, matched = out
+            return d2, matched
+        d2, idx = out
         return d2, jnp.take(target, idx, axis=0)
 
     return correspond

@@ -40,7 +40,8 @@ def pairwise_sq_dists(src: jax.Array, dst: jax.Array) -> jax.Array:
 
 def nn_search(src: jax.Array, dst: jax.Array, *, chunk: int = 2048,
               dst_valid: jax.Array | None = None,
-              score_dtype: str = "fp32"):
+              score_dtype: str = "fp32",
+              return_points: bool = False):
     """Exact NN of each src point in dst.
 
     Args:
@@ -54,9 +55,14 @@ def nn_search(src: jax.Array, dst: jax.Array, *, chunk: int = 2048,
         near-tied candidates (~1e-2 relative); ICP accuracy parity under
         bf16 is validated empirically in the benchmark suite and it stays
         opt-in.
+      return_points: additionally return the gathered winner points
+        ``dst[idx]``. The exact-d2 epilogue already gathers them, so this
+        lets ICP's correspondence stage reuse that gather instead of
+        issuing a second ``jnp.take`` over the target cloud.
 
     Returns:
-      (d2, idx): (N,) squared distance to NN and (N,) int32 index into dst.
+      (d2, idx[, points]): (N,) squared distance to NN, (N,) int32 index
+      into dst, and with ``return_points`` the (N, 3) matched points.
     """
     n = src.shape[0]
     m = dst.shape[0]
@@ -112,7 +118,10 @@ def nn_search(src: jax.Array, dst: jax.Array, *, chunk: int = 2048,
         best_idx = jnp.where(improved, base + local_idx.astype(jnp.int32), best_idx)
         return (best_d2, best_idx), None
 
-    init = (jnp.full((n,), jnp.inf, dtype=src.dtype),
+    # Carry pinned to fp32: local_d2 is always cast to fp32, so an
+    # src.dtype carry would silently upcast (or mis-compare) for bf16
+    # callers.
+    init = (jnp.full((n,), jnp.inf, dtype=jnp.float32),
             jnp.zeros((n,), dtype=jnp.int32))
     bases = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
     xs = (dst_chunks, bases) if valid_chunks is None else (dst_chunks, bases, valid_chunks)
@@ -121,9 +130,12 @@ def nn_search(src: jax.Array, dst: jax.Array, *, chunk: int = 2048,
     # (sn + dn - 2·cross at scene scale) costs ~1e-4 absolute in the
     # distances; recompute the O(N) winner distances directly so the
     # returned d2 is exact. Keep inf where nothing was valid.
-    diff = src - jnp.take(dst, best_idx, axis=0)
+    matched = jnp.take(dst, best_idx, axis=0)
+    diff = src - matched
     exact = jnp.sum(diff * diff, axis=-1).astype(jnp.float32)
     best_d2 = jnp.where(jnp.isinf(best_d2), best_d2, exact)
+    if return_points:
+        return jnp.maximum(best_d2, 0.0), best_idx, matched
     return jnp.maximum(best_d2, 0.0), best_idx
 
 

@@ -31,7 +31,7 @@ def main(argv=None):
     ap.add_argument("--frames", type=int, default=5)
     ap.add_argument("--samples", type=int, default=4096)
     ap.add_argument("--engine", default="xla",
-                    choices=["xla", "pallas", "distributed"])
+                    choices=["xla", "pallas", "distributed", "pyramid"])
     ap.add_argument("--per-frame", action="store_true",
                     help="loop FppsICP.align() per frame instead of one batch")
     ap.add_argument("--reduced", action="store_true",

@@ -1,0 +1,136 @@
+"""Voxel hashing: downsample centroids, counting-sort grid tables."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.collate import PAD_SENTINEL, pad_cloud
+from repro.data.voxelize import (build_voxel_grid, cell_coords,
+                                 linear_cell_ids, voxel_downsample)
+
+
+def _cloud(key, n=500, scale=8.0):
+    return jax.random.uniform(key, (n, 3), minval=-scale, maxval=scale)
+
+
+def _np_cells(pts, origin, voxel):
+    return np.floor((np.asarray(pts) - np.asarray(origin)) / voxel).astype(
+        np.int64)
+
+
+# -- voxel_downsample --------------------------------------------------------
+
+def test_downsample_centroids_match_numpy():
+    pts = _cloud(jax.random.PRNGKey(0), n=400)
+    cent, valid = voxel_downsample(pts, 2.0, max_points=400)
+    cent, valid = np.asarray(cent), np.asarray(valid)
+    occupied = int(valid.sum())
+    assert 0 < occupied < 400  # it actually merged something
+
+    # reference: group by integer cell, average
+    p = np.asarray(pts)
+    origin = np.floor((p.min(axis=0) - 1.0) / 2.0) * 2.0
+    cells = _np_cells(p, origin, 2.0)
+    ref = {}
+    for c, pt in zip(map(tuple, cells), p):
+        ref.setdefault(c, []).append(pt)
+    ref_centroids = sorted(np.mean(v, axis=0).round(4).tolist()
+                           for v in ref.values())
+    got = sorted(cent[valid].round(4).tolist())
+    assert len(got) == len(ref_centroids)
+    np.testing.assert_allclose(got, ref_centroids, atol=1e-3)
+
+
+def test_downsample_invalid_rows_excluded():
+    pts = _cloud(jax.random.PRNGKey(1), n=256)
+    padded, valid = pad_cloud(np.asarray(pts), 384)
+    cent_p, v_p = voxel_downsample(jnp.asarray(padded), 2.0, max_points=384,
+                                   valid=jnp.asarray(valid))
+    cent_u, v_u = voxel_downsample(pts, 2.0, max_points=384)
+    # padded and unpadded agree on the occupied set
+    assert int(v_p.sum()) == int(v_u.sum())
+    got_p = sorted(np.asarray(cent_p)[np.asarray(v_p)].round(4).tolist())
+    got_u = sorted(np.asarray(cent_u)[np.asarray(v_u)].round(4).tolist())
+    np.testing.assert_allclose(got_p, got_u, atol=1e-4)
+    # invalid output rows carry the collate sentinel
+    assert np.all(np.asarray(cent_p)[~np.asarray(v_p)] == PAD_SENTINEL)
+
+
+def test_downsample_capacity_truncation_is_graceful():
+    pts = _cloud(jax.random.PRNGKey(2), n=512, scale=20.0)
+    cent, valid = voxel_downsample(pts, 0.5, max_points=64)  # undersized
+    assert cent.shape == (64, 3)
+    assert int(valid.sum()) == 64  # full: more occupied cells than capacity
+    # surviving rows are real centroids (within the cloud's bounding box)
+    kept = np.asarray(cent)[np.asarray(valid)]
+    assert np.all(np.abs(kept) <= 20.5)
+
+
+def test_downsample_jit_and_vmap():
+    pts = jnp.stack([_cloud(k, n=128) for k in
+                     jax.random.split(jax.random.PRNGKey(3), 4)])
+    fn = jax.jit(jax.vmap(lambda p: voxel_downsample(p, 2.0, max_points=128)))
+    cent, valid = fn(pts)
+    assert cent.shape == (4, 128, 3)
+    assert bool(jnp.all(valid.sum(axis=1) > 0))
+
+
+# -- build_voxel_grid --------------------------------------------------------
+
+def test_grid_tables_consistent():
+    pts = _cloud(jax.random.PRNGKey(4), n=300)
+    grid = build_voxel_grid(pts, 2.0, (16, 16, 16))
+    start, count = np.asarray(grid.start), np.asarray(grid.count)
+    assert count.sum() == 300
+    # starts are the exclusive prefix sum of counts
+    np.testing.assert_array_equal(start, np.concatenate(
+        [[0], np.cumsum(count)[:-1]]))
+    # every point is reachable through exactly its own cell's range
+    sorted_pts = np.asarray(grid.points)
+    ids = np.asarray(grid.point_ids)
+    p = np.asarray(pts)
+    cells = np.asarray(cell_coords(pts, grid.origin, grid.voxel_size,
+                                   grid.dims))
+    lin = np.asarray(linear_cell_ids(jnp.asarray(cells), grid.dims))
+    for c in np.unique(lin):
+        rows = sorted_pts[start[c]:start[c] + count[c]]
+        orig = p[lin == c]
+        np.testing.assert_allclose(sorted(rows.tolist()),
+                                   sorted(orig.tolist()), atol=0)
+    # point_ids round-trips the reorder
+    np.testing.assert_allclose(sorted_pts, p[ids], atol=0)
+
+
+def test_grid_excludes_invalid_rows():
+    pts = _cloud(jax.random.PRNGKey(5), n=200)
+    padded, valid = pad_cloud(np.asarray(pts), 256)
+    grid = build_voxel_grid(jnp.asarray(padded), 2.0, (16, 16, 16),
+                            valid=jnp.asarray(valid))
+    assert int(np.asarray(grid.count).sum()) == 200
+    # reachable sorted rows never include a sentinel coordinate
+    reach = np.asarray(grid.points)[:200]
+    assert np.all(np.abs(reach) < PAD_SENTINEL)
+
+
+def test_grid_crosses_jit_boundary():
+    """VoxelGrid is a pytree with static dims: build inside jit, query
+    outside (and vice versa) without retracing on metadata."""
+    pts = _cloud(jax.random.PRNGKey(6), n=100)
+    grid = jax.jit(lambda p: build_voxel_grid(p, 2.0, (8, 8, 8)))(pts)
+    assert grid.dims == (8, 8, 8)
+    assert grid.num_cells == 512
+
+    @jax.jit
+    def total(g):
+        return g.count.sum()
+
+    assert int(total(grid)) == 100
+
+
+def test_out_of_lattice_points_clip_to_boundary():
+    pts = jnp.array([[0.0, 0.0, 0.0], [100.0, 100.0, 100.0]])
+    grid = build_voxel_grid(pts, 1.0, (4, 4, 4),
+                            origin=jnp.zeros(3))
+    ic = np.asarray(cell_coords(pts, grid.origin, grid.voxel_size, grid.dims))
+    assert ic.max() == 3  # clipped, not wrapped/dropped
+    assert int(np.asarray(grid.count).sum()) == 2
