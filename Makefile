@@ -3,17 +3,19 @@
 #   make check       fast suite (slow-marked tests excluded) + bench smoke
 #   make test        fast test suite (default dev loop)
 #   make test-all    full tier-1 suite, including slow subprocess tests
+#   make lint        ruff (pyproject [tool.ruff]); stdlib fallback offline
 #   make bench       full benchmark harness (writes BENCH_*.json)
 #   make bench-smoke every benchmark entry point in smoke mode
+#   make bench-guard re-run quick sweeps, fail on >20% metric regression
 #
 # pytest picks up pythonpath/markers from pyproject.toml; PYTHONPATH is
 # still exported so `python -m benchmarks.run` resolves `repro` too.
 
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test test-all bench bench-smoke
+.PHONY: check test test-all lint bench bench-smoke bench-guard
 
-check: test bench-smoke
+check: lint test bench-smoke
 
 test:
 	python -m pytest -q -m "not slow"
@@ -21,8 +23,14 @@ test:
 test-all:
 	python -m pytest -q
 
+lint:
+	python tools/lint.py
+
 bench:
 	python -m benchmarks.run
 
 bench-smoke:
 	python -m benchmarks.run --quick
+
+bench-guard:
+	python -m benchmarks.check_regression

@@ -1,0 +1,205 @@
+"""Convergence benchmark: point-to-point vs point-to-plane vs pyramid.
+
+The per-iteration speedups already shipped (grid NN, batching) multiply
+with *fewer iterations*; this suite measures exactly that trade across
+perturbation magnitudes on two synthetic scenes:
+
+  * ``planar`` — ground plane + building facades only (the structured
+    geometry KITTI is full of, and where point-to-point ICP slides along
+    surfaces for many iterations);
+  * ``clean``  — the standard synthetic KITTI mix (poles + clutter too),
+    used to pin transform *parity* between the minimisers.
+
+Per (scene, magnitude) case it runs, through the engine layer with
+``transformation_epsilon`` convergence:
+
+  * xla / point_to_point        (the paper's minimiser — baseline)
+  * xla / point_to_plane        (DESIGN.md §9)
+  * pyramid / point_to_plane    (coarse p2p capture + grid-NN plane polish)
+
+and reports iterations-to-epsilon, wall-clock per registration (compiled,
+steady-state), and the rot/trans agreement of every variant against the
+baseline's fixed point. Writes ``BENCH_convergence.json`` with the ISSUE-3
+acceptance fields:
+
+  * ``parity_ok``      — p2plane matches p2p within rot/trans <= 1e-3 on
+    the clean scene;
+  * ``iter_ratio_min`` — min over planar cases of p2p/p2plane iterations
+    (acceptance: >= 2).
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core import ICPParams, get_engine
+from repro.core.transform import rotation_from_axis_angle, transform_points
+from repro.data.pointcloud import SceneConfig, make_world, scan_frame
+
+JSON_PATH = "BENCH_convergence.json"
+
+# Perturbation magnitudes (metres of translation; rotation scales along).
+# Frame-to-frame LiDAR motion is ~0.6-2.5 m (KITTI highway: 2.5 m/frame);
+# below ~0.5 m both minimisers converge in a handful of iterations and the
+# iteration story is flat — the sweep starts where plain ICP starts to
+# slide.
+FULL_MAGS = (0.6, 0.9, 1.2)
+QUICK_MAGS = (0.6,)
+
+PLANAR_SCENE = SceneConfig(n_ground=14_000, n_walls=10_000, n_poles=0,
+                           n_clutter=0, extent=45.0, sensor_range=45.0)
+CLEAN_SCENE = SceneConfig(n_ground=9_000, n_walls=6_500, n_poles=1_800,
+                          n_clutter=1_700, extent=45.0, sensor_range=45.0)
+
+PARITY_TOL = 1e-3  # rot/trans agreement target (acceptance criterion)
+
+
+def _scan(scene: SceneConfig, seed: int = 0) -> np.ndarray:
+    world = make_world(seed, scene)
+    return scan_frame(world, seed, 0, scene, seed)
+
+
+def _perturbed_source(dst: np.ndarray, mag: float, samples: int,
+                      seed: int = 0):
+    """Sample the scan and displace it by a known transform of magnitude
+    ``mag`` (translation metres; rotation 0.06·mag rad about a tilted
+    axis), plus sensor-grade noise."""
+    rng = np.random.default_rng(seed)
+    R = np.asarray(rotation_from_axis_angle(
+        jnp.asarray([0.15, 0.25, 1.0], jnp.float32),
+        jnp.asarray(0.06 * mag, jnp.float32)))
+    T_gt = np.eye(4, dtype=np.float32)
+    T_gt[:3, :3] = R
+    T_gt[:3, 3] = [0.8 * mag, 0.6 * mag, 0.1 * mag]
+    sel = rng.choice(dst.shape[0], min(samples, dst.shape[0]), replace=False)
+    src = np.asarray(transform_points(
+        jnp.linalg.inv(jnp.asarray(T_gt)), jnp.asarray(dst[sel]))).copy()
+    src += rng.normal(0.0, 0.01, src.shape).astype(np.float32)
+    return src, T_gt
+
+
+def _variants(params: ICPParams):
+    plane = params._replace(minimizer="point_to_plane")
+    return (
+        ("p2p", "xla", params),
+        ("p2plane", "xla", plane),
+        ("pyramid_p2plane", "pyramid", plane),
+    )
+
+
+def _run_case(scene_name: str, dst: np.ndarray, mag: float, samples: int,
+              params: ICPParams, timing_iters: int):
+    src, T_gt = _perturbed_source(dst, mag, samples)
+    case = {"scene": scene_name, "magnitude": float(mag),
+            "n": int(src.shape[0]), "m": int(dst.shape[0]),
+            "variants": {}}
+    T_base = None
+    for name, engine_name, p in _variants(params):
+        engine = get_engine(engine_name)
+        res = engine.register(src, dst, p)          # warmup + result
+        jax.block_until_ready(res.T)
+        t = timeit(lambda e=engine, pp=p: e.register(src, dst, pp),
+                   warmup=0, iters=timing_iters)
+        T = np.asarray(res.T)
+        row = {
+            "iterations": int(res.iterations),
+            "converged": bool(res.converged),
+            "rmse": float(res.rmse),
+            "wall_s": float(t),
+            "trans_err_gt": float(np.linalg.norm(T[:3, 3] - T_gt[:3, 3])),
+        }
+        if T_base is None:
+            T_base = T
+        else:
+            row["rot_diff_vs_p2p"] = float(
+                np.linalg.norm(T[:3, :3] - T_base[:3, :3]))
+            row["trans_diff_vs_p2p"] = float(
+                np.linalg.norm(T[:3, 3] - T_base[:3, 3]))
+        case["variants"][name] = row
+    v = case["variants"]
+    case["iter_ratio"] = v["p2p"]["iterations"] / max(
+        v["p2plane"]["iterations"], 1)
+    case["speedup_wall"] = v["p2p"]["wall_s"] / v["p2plane"]["wall_s"]
+    case["speedup_wall_pyramid"] = (v["p2p"]["wall_s"]
+                                    / v["pyramid_p2plane"]["wall_s"])
+    return case
+
+
+def run(mags=FULL_MAGS, samples: int = 1024, timing_iters: int = 2,
+        planar_scene: SceneConfig | None = None,
+        clean_scene: SceneConfig | None = None,
+        out_json: str = JSON_PATH):
+    planar_scene = PLANAR_SCENE if planar_scene is None else planar_scene
+    clean_scene = CLEAN_SCENE if clean_scene is None else clean_scene
+    params = ICPParams(max_iterations=80, max_correspondence_distance=1.0,
+                       transformation_epsilon=1e-6)
+    report = {"cases": [], "parity_tol": PARITY_TOL}
+    rows = []
+
+    dst_planar = _scan(planar_scene, seed=0)
+    dst_clean = _scan(clean_scene, seed=1)
+    for scene_name, dst in (("planar", dst_planar), ("clean", dst_clean)):
+        for mag in mags:
+            case = _run_case(scene_name, dst, mag, samples, params,
+                             timing_iters)
+            report["cases"].append(case)
+            v = case["variants"]
+            rows.append((
+                f"convergence/{scene_name}_m{mag}_p2p",
+                v["p2p"]["wall_s"] * 1e6,
+                f"iters={v['p2p']['iterations']}"))
+            rows.append((
+                f"convergence/{scene_name}_m{mag}_p2plane",
+                v["p2plane"]["wall_s"] * 1e6,
+                f"iters={v['p2plane']['iterations']};"
+                f"iter_ratio={case['iter_ratio']:.2f}x;"
+                f"wall_speedup={case['speedup_wall']:.2f}x"))
+            rows.append((
+                f"convergence/{scene_name}_m{mag}_pyramid_p2plane",
+                v["pyramid_p2plane"]["wall_s"] * 1e6,
+                f"iters={v['pyramid_p2plane']['iterations']};"
+                f"wall_speedup={case['speedup_wall_pyramid']:.2f}x"))
+
+    planar_cases = [c for c in report["cases"] if c["scene"] == "planar"]
+    clean_cases = [c for c in report["cases"] if c["scene"] == "clean"]
+    report["iter_ratio_min"] = min(c["iter_ratio"] for c in planar_cases)
+    report["iter_ratio_mean"] = float(np.mean(
+        [c["iter_ratio"] for c in planar_cases]))
+    parity_rot = max(c["variants"]["p2plane"]["rot_diff_vs_p2p"]
+                     for c in clean_cases)
+    parity_trans = max(c["variants"]["p2plane"]["trans_diff_vs_p2p"]
+                       for c in clean_cases)
+    report["parity_rot_max"] = parity_rot
+    report["parity_trans_max"] = parity_trans
+    report["parity_ok"] = bool(parity_rot <= PARITY_TOL
+                               and parity_trans <= PARITY_TOL)
+    report["iter_ratio_ok"] = bool(report["iter_ratio_min"] >= 2.0)
+    with open(out_json, "w") as f:
+        json.dump(report, f, indent=2)
+    rows.append(("convergence/parity_rot_max", 0.0,
+                 f"{parity_rot:.2e} (<= {PARITY_TOL} target)"))
+    rows.append(("convergence/parity_trans_max", 0.0,
+                 f"{parity_trans:.2e} (<= {PARITY_TOL} target)"))
+    rows.append(("convergence/iter_ratio_min", 0.0,
+                 f"{report['iter_ratio_min']:.2f}x (>= 2x target)"))
+    return rows
+
+
+def run_quick():
+    """Smoke mode: one magnitude, reduced scenes, throwaway json path."""
+    planar = SceneConfig(n_ground=5_000, n_walls=3_600, n_poles=0,
+                         n_clutter=0, extent=35.0, sensor_range=40.0)
+    clean = SceneConfig(n_ground=3_000, n_walls=2_200, n_poles=600,
+                        n_clutter=700, extent=30.0, sensor_range=35.0)
+    return run(mags=QUICK_MAGS, samples=512, timing_iters=1,
+               planar_scene=planar, clean_scene=clean,
+               out_json="BENCH_convergence_quick.json")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

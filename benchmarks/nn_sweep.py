@@ -105,7 +105,7 @@ def _icp_parity(src, dst, params):
 
 def run(sizes=FULL_SIZES, samples: int = 4096, max_per_cell: int = 32,
         grid_dims=(128, 128, 32), parity: bool = True, scene=None,
-        out_json: str = "BENCH_nn.json"):
+        mitigation: bool = True, out_json: str = "BENCH_nn.json"):
     scene = DENSE_SCENE if scene is None else scene
     src, dst_full, _ = frame_pair(0, 5, scene, samples)
     if dst_full.shape[0] < max(sizes):
@@ -126,7 +126,7 @@ def run(sizes=FULL_SIZES, samples: int = 4096, max_per_cell: int = 32,
                      f"agree_gated={case['agree_gated']:.4f}"))
         rows.append((f"nn_sweep/m{m}_grid_build", case["t_grid_build_s"] * 1e6,
                      "once-per-frame"))
-        if m == max(sizes):
+        if mitigation and m == max(sizes):
             # Overflow mitigation at the densest M: same 1 m exact radius
             # via rings=2 over half-size cells -> ~4x lower cell occupancy
             # (DESIGN.md §8 "exact vs approximate").

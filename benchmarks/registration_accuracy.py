@@ -6,9 +6,7 @@ registration accuracy within 0.01 m.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import bench_frames, emit, timeit
+from benchmarks.common import bench_frames, emit
 from repro.core import FppsICP
 from repro.core.baseline import kdtree_icp
 

@@ -57,9 +57,13 @@ def _make_pairs(batch: int, n: int, m: int, seed: int = 0):
 
 
 def run(batch: int = 16, n: int = 128, m: int = 256, iters: int = 8,
-        quick: bool = False):
+        quick: bool = False, out_json: str | None = None):
     if quick:
         batch, n, m, iters = 8, 128, 256, 6
+        if out_json is None:
+            # never clobber the committed baseline from smoke mode — the
+            # bench-guard diffs against it (scratch name is gitignored)
+            out_json = "BENCH_throughput_quick.json"
     assert batch >= 8, "throughput claim is defined at batch >= 8"
     pairs = _make_pairs(batch, n, m)
     params = ICPParams(max_iterations=iters, transformation_epsilon=0.0,
@@ -112,7 +116,8 @@ def run(batch: int = 16, n: int = 128, m: int = 256, iters: int = 8,
         "looped_fps": fps_loop, "batched_fps": fps_batch,
         "speedup": speedup, "max_abs_transform_diff": agreement,
     }
-    JSON_PATH.write_text(json.dumps(summary, indent=2))
+    path = JSON_PATH if out_json is None else pathlib.Path(out_json)
+    path.write_text(json.dumps(summary, indent=2))
 
     rows = [
         (f"throughput/looped_b{batch}", t_loop / batch * 1e6,

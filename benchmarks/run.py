@@ -10,6 +10,8 @@
                                          also writes BENCH_throughput.json)
   nn_sweep -> nn_sweep               (brute vs grid-bucketed NN sweep;
                                          also writes BENCH_nn.json)
+  convergence -> convergence         (p2p vs p2plane vs pyramid iteration
+                                         counts; writes BENCH_convergence.json)
 
 ``--quick`` runs every suite in smoke mode (reduced scenes, 2 frames,
 fewer iterations) so CI can exercise all entry points in seconds.
@@ -20,9 +22,10 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (kernel_resources, nn_sweep, power_efficiency,
-                        registration_accuracy, registration_latency,
-                        registration_throughput, roofline_report)
+from benchmarks import (convergence, kernel_resources, nn_sweep,
+                        power_efficiency, registration_accuracy,
+                        registration_latency, registration_throughput,
+                        roofline_report)
 from benchmarks.common import QUICK_SCENE, emit
 
 SUITES = {
@@ -33,6 +36,7 @@ SUITES = {
     "roofline": roofline_report.run,
     "throughput": registration_throughput.run,
     "nn_sweep": nn_sweep.run,
+    "convergence": convergence.run,
 }
 
 # Smoke-mode kwargs per suite (reduced scenes, 2 frames, short loops).
@@ -44,7 +48,8 @@ QUICK_KWARGS = {
     "throughput": dict(quick=True),
 }
 # Suites whose smoke mode is a different entry point, not just kwargs.
-QUICK_SUITES = {"nn_sweep": nn_sweep.run_quick}
+QUICK_SUITES = {"nn_sweep": nn_sweep.run_quick,
+                "convergence": convergence.run_quick}
 
 
 def main(argv=None) -> None:

@@ -27,6 +27,10 @@ def main(argv=None):
     ap.add_argument("--points", type=int, default=1024)
     ap.add_argument("--engine", default="xla",
                     choices=["xla", "pallas", "distributed", "pyramid"])
+    ap.add_argument("--minimizer", default="point_to_point",
+                    choices=["point_to_point", "point_to_plane"])
+    ap.add_argument("--robust", default="none",
+                    choices=["none", "huber", "tukey"])
     args = ap.parse_args(argv)
 
     keys = jax.random.split(jax.random.PRNGKey(0), args.frames)
@@ -43,7 +47,8 @@ def main(argv=None):
         gts.append(np.asarray(T))
 
     engine = get_engine(args.engine, chunk=256)
-    params = ICPParams(max_iterations=25, chunk=256)
+    params = ICPParams(max_iterations=25, chunk=256,
+                       minimizer=args.minimizer, robust_kernel=args.robust)
     t0 = time.time()
     res, batch = engine.register_pairs(pairs, params)
     jax.block_until_ready(res.T)

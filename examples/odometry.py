@@ -29,12 +29,17 @@ def main(argv=None):
     ap.add_argument("--samples", type=int, default=2048)
     ap.add_argument("--engine", default="xla",
                     choices=["xla", "pallas", "distributed", "pyramid"])
+    ap.add_argument("--minimizer", default="point_to_point",
+                    choices=["point_to_point", "point_to_plane"])
+    ap.add_argument("--robust", default="none",
+                    choices=["none", "huber", "tukey"])
     args = ap.parse_args(argv)
 
     cfg = SceneConfig(n_ground=9000, n_walls=6000, n_poles=1800,
                       n_clutter=1700, extent=40.0, sensor_range=45.0)
     params = ICPParams(max_iterations=50, max_correspondence_distance=1.0,
-                       transformation_epsilon=1e-5)
+                       transformation_epsilon=1e-5,
+                       minimizer=args.minimizer, robust_kernel=args.robust)
 
     pairs = [frame_pair(args.seq, f, cfg, args.samples)
              for f in range(args.frames)]

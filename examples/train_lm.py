@@ -9,7 +9,6 @@ hundred steps on one core); pass --full-100m to run the real thing.
 import argparse
 import dataclasses
 
-from repro.configs import get_smoke
 from repro.launch import train as train_driver
 
 

@@ -5,7 +5,10 @@ from repro.core.engine import (RegistrationEngine, available_engines,
 from repro.core.icp import (ICPParams, ICPResult, icp, icp_batch,
                             icp_fixed_iterations)
 from repro.core.nn_search import nn_search, pairwise_sq_dists
-from repro.core.nn_search_grid import grid_nn_fn, nn_search_grid
+from repro.core.nn_search_grid import (GridQueryStats, grid_nn_fn,
+                                       neighborhood_stats, nn_search_grid)
+from repro.core.point_to_plane import (point_to_plane_rmse, robust_weights,
+                                       solve_point_to_plane)
 from repro.core.pyramid import PyramidEngine, icp_pyramid
 from repro.core.svd3x3 import svd3x3
 from repro.core.transform import (estimate_rigid_transform, make_transform,
@@ -16,6 +19,8 @@ __all__ = [
     "available_engines", "get_engine", "register_engine",
     "icp", "icp_batch", "icp_fixed_iterations", "icp_pyramid",
     "PyramidEngine", "grid_nn_fn", "nn_search_grid",
+    "GridQueryStats", "neighborhood_stats",
     "nn_search", "pairwise_sq_dists", "svd3x3", "estimate_rigid_transform",
     "make_transform", "random_rigid_transform", "transform_points",
+    "point_to_plane_rmse", "robust_weights", "solve_point_to_plane",
 ]

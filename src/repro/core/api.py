@@ -46,6 +46,9 @@ class FppsICP:
         self._max_corr = 1.0
         self._max_iter = 50
         self._eps = 1e-5
+        self._minimizer = "point_to_point"
+        self._robust_kernel = "none"
+        self._robust_scale = 0.5
         self._chunk = chunk
         self._initialized = False
         self._last_result: ICPResult | None = None
@@ -75,12 +78,33 @@ class FppsICP:
     def setTransformationEpsilon(self, transformationEpsilon: float) -> None:
         self._eps = float(transformationEpsilon)
 
+    def setMinimizer(self, minimizer: str) -> None:
+        """'point_to_point' (paper default) or 'point_to_plane'
+        (DESIGN.md §9; PCL's IterativeClosestPointWithNormals analogue)."""
+        from repro.core.icp import MINIMIZERS
+        if minimizer not in MINIMIZERS:
+            raise ValueError(f"unknown minimizer {minimizer!r}; "
+                             f"expected one of {MINIMIZERS}")
+        self._minimizer = minimizer
+
+    def setRobustKernel(self, kind: str, scale: float | None = None) -> None:
+        """IRLS reweighting: 'none', 'huber' or 'tukey' (+ optional scale
+        in metres — huber's delta / tukey's cutoff)."""
+        from repro.core.point_to_plane import ROBUST_KERNELS
+        if kind not in ROBUST_KERNELS:
+            raise ValueError(f"unknown robust kernel {kind!r}; "
+                             f"expected one of {ROBUST_KERNELS}")
+        self._robust_kernel = kind
+        if scale is not None:
+            self._robust_scale = float(scale)
+
     def align(self) -> np.ndarray:
         """Run registration; returns the final 4x4 transformation matrix."""
         if not self._initialized:
             self.hardwareInitialize()
         if self._source is None or self._target is None:
-            raise ValueError("setInputSource/setInputTarget must be called before align()")
+            raise ValueError(
+                "setInputSource/setInputTarget must be called before align()")
         result = self._engine.register(self._source, self._target,
                                        self._params(), self._initial_T)
         self._last_result = jax.tree_util.tree_map(np.asarray, result)
@@ -105,4 +129,7 @@ class FppsICP:
         return ICPParams(max_iterations=self._max_iter,
                          max_correspondence_distance=self._max_corr,
                          transformation_epsilon=self._eps,
-                         chunk=self._chunk)
+                         chunk=self._chunk,
+                         minimizer=self._minimizer,
+                         robust_kernel=self._robust_kernel,
+                         robust_scale=self._robust_scale)

@@ -32,28 +32,36 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import axis_size as _axis_size, shard_map
 from repro.core.icp import ICPParams, ICPResult, icp, icp_fixed_iterations
 from repro.core.nn_search import nn_search
-
-from repro.compat import axis_size as _axis_size, shard_map
 
 
 def _local_correspond(src_t: jax.Array, dst_local: jax.Array,
                       chunk: int, axis_names: Sequence[str],
-                      score_dtype: str = "fp32"):
+                      score_dtype: str = "fp32",
+                      normals_local: jax.Array | None = None):
     """Local exact NN + cross-shard winner combine.
 
-    Returns (d2, matched_points) with both replicated across ``axis_names``.
+    Returns (d2, matched_points[, matched_normals]) replicated across
+    ``axis_names``. Winner normals ride the same dense all-gather as the
+    winner points — the (d2, xyz, nxyz) tuple is still a fixed-size
+    regular collective, no cross-shard index gather.
     """
     d2, idx_local = nn_search(src_t, dst_local, chunk=chunk,
                               score_dtype=score_dtype)
     matched_local = jnp.take(dst_local, idx_local, axis=0)        # (n, 3)
-    cand = jnp.concatenate([d2[:, None], matched_local], axis=1)  # (n, 4)
-    for ax in axis_names:  # combine one axis at a time: live buffer stays (S,n,4)
-        gathered = jax.lax.all_gather(cand, ax)                   # (S, n, 4)
+    cols = [d2[:, None], matched_local]
+    if normals_local is not None:
+        cols.append(jnp.take(normals_local, idx_local, axis=0))   # (n, 3)
+    cand = jnp.concatenate(cols, axis=1)                          # (n, 4|7)
+    for ax in axis_names:  # combine one axis at a time: live buffer stays (S,n,C)
+        gathered = jax.lax.all_gather(cand, ax)                   # (S, n, C)
         win = jnp.argmin(gathered[..., 0], axis=0)                # (n,)
         cand = jnp.take_along_axis(gathered, win[None, :, None], axis=0)[0]
-    return cand[:, 0], cand[:, 1:4]
+    if normals_local is None:
+        return cand[:, 0], cand[:, 1:4]
+    return cand[:, 0], cand[:, 1:4], cand[:, 4:7]
 
 
 def distributed_nn_search(mesh: Mesh, src: jax.Array, dst: jax.Array,
@@ -91,22 +99,36 @@ def distributed_nn_search(mesh: Mesh, src: jax.Array, dst: jax.Array,
 def icp_sharded(mesh: Mesh, source: jax.Array, target: jax.Array,
                 params: ICPParams = ICPParams(),
                 *, target_axes: Sequence[str] = ("data", "model"),
-                fixed_iterations: bool = False) -> ICPResult:
-    """Giant-frame ICP: one registration, target sharded over target_axes."""
-    axes = tuple(target_axes)
+                fixed_iterations: bool = False,
+                dst_normals: jax.Array | None = None) -> ICPResult:
+    """Giant-frame ICP: one registration, target sharded over target_axes.
 
-    def body(src_rep, dst_local):
+    ``dst_normals`` (M, 3) — required for ``minimizer="point_to_plane"`` —
+    is sharded alongside the target; estimate it on the *unsharded* cloud
+    (shard-local estimation would degrade at shard boundaries).
+    """
+    axes = tuple(target_axes)
+    if params.minimizer == "point_to_plane" and dst_normals is None:
+        raise ValueError("icp_sharded with minimizer='point_to_plane' "
+                         "needs dst_normals (estimate on the full target)")
+
+    def body(src_rep, dst_local, nrm_local=None):
         cfn = functools.partial(_local_correspond, dst_local=dst_local,
                                 chunk=params.chunk, axis_names=axes,
-                                score_dtype=params.score_dtype)
+                                score_dtype=params.score_dtype,
+                                normals_local=nrm_local)
         runner = icp_fixed_iterations if fixed_iterations else icp
         return runner(src_rep, None, params, correspond_fn=cfn)
 
     out_specs = ICPResult(T=P(), rmse=P(), iterations=P(), converged=P(),
                           inlier_frac=P())
-    fn = shard_map(body, mesh=mesh, in_specs=(P(), P(axes)),
+    if dst_normals is None:
+        fn = shard_map(body, mesh=mesh, in_specs=(P(), P(axes)),
+                       out_specs=out_specs, check_vma=False)
+        return fn(source, target)
+    fn = shard_map(body, mesh=mesh, in_specs=(P(), P(axes), P(axes)),
                    out_specs=out_specs, check_vma=False)
-    return fn(source, target)
+    return fn(source, target, dst_normals)
 
 
 def batched_icp_sharded(mesh: Mesh, src_batch: jax.Array,
@@ -115,7 +137,8 @@ def batched_icp_sharded(mesh: Mesh, src_batch: jax.Array,
                         *, frame_axes: Sequence[str] = ("data",),
                         target_axes: Sequence[str] = ("model",),
                         fixed_iterations: bool = True,
-                        src_valid: jax.Array | None = None) -> ICPResult:
+                        src_valid: jax.Array | None = None,
+                        dst_normals: jax.Array | None = None) -> ICPResult:
     """Fleet mode: (F, N, 3) sources, (F, M, 3) targets.
 
     Frames shard over ``frame_axes`` (use ("pod", "data") on the multi-pod
@@ -128,26 +151,42 @@ def batched_icp_sharded(mesh: Mesh, src_batch: jax.Array,
     ``repro.data.collate``); padded *target* rows must carry far-sentinel
     coordinates so the local argmin never picks them — the per-shard winner
     combine has no mask channel by design (the (d2, xyz) tuple stays dense).
+    ``dst_normals`` (F, M, 3) — required for the plane minimiser — shards
+    like the targets and rides the winner combine as three extra columns.
     """
     f_axes, t_axes = tuple(frame_axes), tuple(target_axes)
     if src_valid is None:
         src_valid = jnp.ones(src_batch.shape[:2], dtype=src_batch.dtype)
+    if params.minimizer == "point_to_plane" and dst_normals is None:
+        raise ValueError("batched_icp_sharded with "
+                         "minimizer='point_to_plane' needs dst_normals "
+                         "(estimate per frame on the unsharded targets)")
 
-    def body(src_b, dst_b, sv_b):
-        def one(src, dst_local, sv):
+    def body(src_b, dst_b, sv_b, nrm_b=None):
+        def one(src, dst_local, sv, nrm_local):
             cfn = functools.partial(_local_correspond, dst_local=dst_local,
                                     chunk=params.chunk, axis_names=t_axes,
-                                    score_dtype=params.score_dtype)
+                                    score_dtype=params.score_dtype,
+                                    normals_local=nrm_local)
             runner = icp_fixed_iterations if fixed_iterations else icp
             return runner(src, None, params, correspond_fn=cfn, src_valid=sv)
-        return jax.vmap(one)(src_b, dst_b, sv_b)
+        if nrm_b is None:
+            return jax.vmap(lambda s, d, v: one(s, d, v, None))(
+                src_b, dst_b, sv_b)
+        return jax.vmap(one)(src_b, dst_b, sv_b, nrm_b)
 
     out_specs = ICPResult(T=P(f_axes), rmse=P(f_axes), iterations=P(f_axes),
                           converged=P(f_axes), inlier_frac=P(f_axes))
+    if dst_normals is None:
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(P(f_axes), P(f_axes, t_axes), P(f_axes)),
+                       out_specs=out_specs, check_vma=False)
+        return fn(src_batch, dst_batch, src_valid)
     fn = shard_map(body, mesh=mesh,
-                   in_specs=(P(f_axes), P(f_axes, t_axes), P(f_axes)),
+                   in_specs=(P(f_axes), P(f_axes, t_axes), P(f_axes),
+                             P(f_axes, t_axes)),
                    out_specs=out_specs, check_vma=False)
-    return fn(src_batch, dst_batch, src_valid)
+    return fn(src_batch, dst_batch, src_valid, dst_normals)
 
 
 def shard_inputs(mesh: Mesh, src_batch, dst_batch,

@@ -58,6 +58,20 @@ def _pad_device(points: jax.Array, size: int):
     return padded, valid
 
 
+def _target_normals(dst: jax.Array, params: ICPParams,
+                    valid: jax.Array | None):
+    """Trace-scope target normals for the plane minimiser, or None.
+
+    Engines that sentinel-mask their target *before* the ICP loop (pallas,
+    distributed) must estimate normals first, from the true valid mask —
+    see ``default_target_normals``.
+    """
+    if params.minimizer != "point_to_plane":
+        return None
+    from repro.data.normals import default_target_normals
+    return default_target_normals(dst, valid)
+
+
 class RegistrationEngine:
     """Base engine: owns jit caches, bucketing, and the register API.
 
@@ -220,10 +234,12 @@ class PallasEngine(RegistrationEngine):
 
         def run(src, dst, T0, sv, dv):
             self._note_trace("single", params, src.shape, dst.shape)
+            normals = _target_normals(dst, params, dv)
             dst = _mask_invalid(dst, dv)
             nn_fn = resident_nn_fn(dst, bn=self._bn, bm=self._bm,
                                    interpret=interpret)
-            return icp(src, dst, params, T0, nn_fn=nn_fn, src_valid=sv)
+            return icp(src, dst, params, T0, nn_fn=nn_fn, src_valid=sv,
+                       target_normals=normals)
 
         return jax.jit(run)
 
@@ -238,11 +254,13 @@ class PallasEngine(RegistrationEngine):
                                       (src_b.shape[0], 4, 4))
 
             def one(src, dst, T0_, sv_, dv_):
+                normals = _target_normals(dst, params, dv_)
                 dst = _mask_invalid(dst, dv_)
                 nn_fn = resident_nn_fn(dst, bn=self._bn, bm=self._bm,
                                        interpret=interpret)
                 return icp_fixed_iterations(src, dst, params, T0_,
-                                            nn_fn=nn_fn, src_valid=sv_)
+                                            nn_fn=nn_fn, src_valid=sv_,
+                                            target_normals=normals)
 
             return jax.vmap(one)(src_b, dst_b, T0, sv, dv)
 
@@ -298,6 +316,15 @@ class DistributedEngine(RegistrationEngine):
                     [x, jnp.repeat(x[:1], pad, axis=0)], axis=0)
 
             src_b, dst_b, T0, sv, dv = map(rep, (src_b, dst_b, T0, sv, dv))
+            if params.minimizer == "point_to_plane":
+                # Normals come from the *unsharded* per-frame targets (and
+                # the true valid mask), before the sentinel masking below.
+                normals = jax.vmap(
+                    lambda d, v: _target_normals(d, params, v))(
+                        dst_b, dv if dv is not None
+                        else jnp.ones(dst_b.shape[:2], bool))
+            else:
+                normals = None
             dst_b = _mask_invalid(dst_b, dv)
             if T0 is not None:
                 # warm start: register T0(src) and compose T_result @ T0.
@@ -306,7 +333,7 @@ class DistributedEngine(RegistrationEngine):
             res = batched_icp_sharded(mesh, src_b, dst_b, params,
                                       frame_axes=self._frame_axes,
                                       target_axes=self._target_axes,
-                                      src_valid=sv)
+                                      src_valid=sv, dst_normals=normals)
             if T0 is not None:
                 res = res._replace(T=jnp.einsum("bij,bjk->bik", res.T, T0))
             if pad:

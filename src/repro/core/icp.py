@@ -17,6 +17,14 @@ Correspondence rejection: the paper's setMaxCorrespondenceDistance filter is
 a weight mask fed to the weighted Kabsch step (zero-weight pairs contribute
 nothing to the covariance), exactly like PCL's behaviour of dropping
 out-of-range pairs.
+
+Minimiser choice (DESIGN.md §9): ``minimizer="point_to_plane"`` swaps the
+Kabsch step for the linearised point-to-plane Gauss-Newton step
+(``core.point_to_plane``), which needs per-correspondence target normals —
+either supplied by the caller (``target_normals``) or estimated once at
+trace scope from the target cloud (``repro.data.normals``). Robust
+reweighting (``robust_kernel``) applies to either minimiser, on top of the
+distance gate.
 """
 from __future__ import annotations
 
@@ -27,6 +35,9 @@ import jax.numpy as jnp
 
 from repro.core import transform as tf
 from repro.core.nn_search import nn_search
+from repro.core.point_to_plane import robust_weights, solve_point_to_plane
+
+MINIMIZERS = ("point_to_point", "point_to_plane")
 
 
 class ICPParams(NamedTuple):
@@ -35,6 +46,9 @@ class ICPParams(NamedTuple):
     transformation_epsilon: float = 1e-5
     chunk: int = 2048  # target-cloud tile size for the NN sweep
     score_dtype: str = "fp32"  # "bf16": half-width distance tiles (§Perf A2)
+    minimizer: str = "point_to_point"  # | "point_to_plane" (DESIGN.md §9)
+    robust_kernel: str = "none"        # | "huber" | "tukey"
+    robust_scale: float = 0.5          # huber delta / tukey cutoff, metres
 
 
 class ICPState(NamedTuple):
@@ -56,21 +70,40 @@ class ICPResult(NamedTuple):
 def _icp_iteration(source, state: ICPState, params: ICPParams,
                    correspond_fn: Callable,
                    src_valid: jax.Array | None = None):
-    """One ICP iteration. ``correspond_fn(src_t) -> (d2, matched)`` supplies
-    correspondences; for the distributed engine ``matched`` are the gathered
-    winner *points* (cross-shard index gathers never happen).
+    """One ICP iteration. ``correspond_fn(src_t) -> (d2, matched)`` — or
+    ``(d2, matched, normals)`` for the point-to-plane minimiser — supplies
+    correspondences; for the distributed engine ``matched`` (and the winner
+    normals) are gathered *values* (cross-shard index gathers never happen).
 
     ``src_valid`` (N,) masks padded source rows (shape-bucketed batching):
-    they get zero Kabsch weight and are excluded from the inlier fraction's
-    denominator, so a padded registration is numerically identical to the
-    unpadded one.
+    they get zero minimiser weight and are excluded from the inlier
+    fraction's denominator, so a padded registration is numerically
+    identical to the unpadded one.
     """
     src_t = tf.transform_points(state.T, source)
-    d2, matched = correspond_fn(src_t)
+    out = correspond_fn(src_t)
+    normals = out[2] if len(out) == 3 else None
+    d2, matched = out[0], out[1]
     weights = (d2 <= params.max_correspondence_distance ** 2).astype(source.dtype)
     if src_valid is not None:
         weights = weights * src_valid.astype(source.dtype)
-    T_delta = tf.estimate_rigid_transform(src_t, matched, weights)
+    plane = params.minimizer == "point_to_plane"
+    if plane and normals is None:
+        raise ValueError("minimizer='point_to_plane' needs matched normals: "
+                         "pass target_normals (or a correspond_fn returning "
+                         "a (d2, matched, normals) triple)")
+    if params.robust_kernel != "none":
+        # IRLS weight from the residual the active minimiser optimises.
+        if plane:
+            residual = jnp.abs(jnp.sum(normals * (src_t - matched), axis=-1))
+        else:
+            residual = jnp.sqrt(jnp.maximum(d2, 0.0))
+        weights = weights * robust_weights(residual, params.robust_kernel,
+                                           params.robust_scale)
+    if plane:
+        T_delta = solve_point_to_plane(src_t, matched, normals, weights)
+    else:
+        T_delta = tf.estimate_rigid_transform(src_t, matched, weights)
     T_new = T_delta @ state.T  # cumulative product, paper eq. (3)
     delta = tf.transform_delta(T_delta)
     err = tf.rmse(tf.transform_points(T_delta, src_t), matched, weights)
@@ -85,7 +118,8 @@ def _icp_iteration(source, state: ICPState, params: ICPParams,
 
 def _default_correspond_fn(target: jax.Array, params: ICPParams,
                            nn_fn: Callable | None,
-                           dst_valid: jax.Array | None = None) -> Callable:
+                           dst_valid: jax.Array | None = None,
+                           target_normals: jax.Array | None = None) -> Callable:
     if nn_fn is None:
         # Fused winner gather: the exact-d2 epilogue inside nn_search
         # already gathers dst[idx], so ask for the points and skip the
@@ -105,12 +139,35 @@ def _default_correspond_fn(target: jax.Array, params: ICPParams,
         # Searchers may return (d2, idx) or the fused (d2, idx, points).
         out = nn_fn(src_t, target)
         if len(out) == 3:
-            d2, _, matched = out
+            d2, idx, matched = out
+        else:
+            d2, idx = out
+            matched = jnp.take(target, idx, axis=0)
+        if target_normals is None:
             return d2, matched
-        d2, idx = out
-        return d2, jnp.take(target, idx, axis=0)
+        # Winner normals ride the same index gather (invalid-normal rows
+        # are zero vectors, which the plane solve ignores by construction).
+        return d2, matched, jnp.take(target_normals, idx, axis=0)
 
     return correspond
+
+
+def _check_minimizer(params: ICPParams) -> None:
+    if params.minimizer not in MINIMIZERS:
+        raise ValueError(f"unknown minimizer {params.minimizer!r}; "
+                         f"expected one of {MINIMIZERS}")
+
+
+def _auto_target_normals(target: jax.Array | None,
+                         dst_valid: jax.Array | None):
+    """Estimate target normals at trace scope (once per frame) when the
+    plane minimiser is selected but the caller supplied none."""
+    if target is None:
+        raise ValueError("minimizer='point_to_plane' needs a target cloud "
+                         "(or explicit target_normals) to estimate normals "
+                         "from")
+    from repro.data.normals import default_target_normals
+    return default_target_normals(target, dst_valid)
 
 
 def icp(source: jax.Array, target: jax.Array | None,
@@ -119,19 +176,27 @@ def icp(source: jax.Array, target: jax.Array | None,
         nn_fn: Callable | None = None,
         correspond_fn: Callable | None = None,
         src_valid: jax.Array | None = None,
-        dst_valid: jax.Array | None = None) -> ICPResult:
+        dst_valid: jax.Array | None = None,
+        target_normals: jax.Array | None = None) -> ICPResult:
     """Run ICP aligning ``source`` (N,3) onto ``target`` (M,3).
 
     ``nn_fn`` lets callers swap the correspondence engine: the local XLA
     brute force (default), the Pallas kernel wrapper, or the shard_map
     distributed searcher. It must return (d2, idx) for (src, target).
     ``correspond_fn`` overrides the whole correspondence stage (src_t ->
-    (d2, matched points)); target may then be None.
+    (d2, matched points[, matched normals])); target may then be None.
     ``src_valid`` (N,) / ``dst_valid`` (M,) mask padded rows of
     shape-bucketed clouds (see ``repro.data.collate``).
+    ``target_normals`` (M,3) feeds the point-to-plane minimiser; when the
+    plane minimiser is selected without them they are estimated from the
+    target once at trace scope (``repro.data.normals`` defaults).
     """
+    _check_minimizer(params)
     if correspond_fn is None:
-        correspond_fn = _default_correspond_fn(target, params, nn_fn, dst_valid)
+        if params.minimizer == "point_to_plane" and target_normals is None:
+            target_normals = _auto_target_normals(target, dst_valid)
+        correspond_fn = _default_correspond_fn(target, params, nn_fn,
+                                               dst_valid, target_normals)
     if initial_transform is None:
         initial_transform = jnp.eye(4, dtype=source.dtype)
 
@@ -157,12 +222,16 @@ def icp(source: jax.Array, target: jax.Array | None,
 def icp_fixed_iterations(source, target, params: ICPParams = ICPParams(),
                          initial_transform=None, nn_fn=None,
                          correspond_fn=None, src_valid=None,
-                         dst_valid=None) -> ICPResult:
+                         dst_valid=None, target_normals=None) -> ICPResult:
     """Unrolled-depth variant via lax.scan — fixed cost, used for the dry-run
     and roofline (while_loop trip counts are data-dependent; scan gives the
     compiler a static schedule, mirroring the paper's fixed 50-iteration cap)."""
+    _check_minimizer(params)
     if correspond_fn is None:
-        correspond_fn = _default_correspond_fn(target, params, nn_fn, dst_valid)
+        if params.minimizer == "point_to_plane" and target_normals is None:
+            target_normals = _auto_target_normals(target, dst_valid)
+        correspond_fn = _default_correspond_fn(target, params, nn_fn,
+                                               dst_valid, target_normals)
     if initial_transform is None:
         initial_transform = jnp.eye(4, dtype=source.dtype)
     init = ICPState(T=initial_transform,
@@ -190,7 +259,8 @@ def icp_batch(sources: jax.Array, targets: jax.Array,
               initial_transforms: jax.Array | None = None,
               nn_fn: Callable | None = None,
               src_valid: jax.Array | None = None,
-              dst_valid: jax.Array | None = None) -> ICPResult:
+              dst_valid: jax.Array | None = None,
+              target_normals: jax.Array | None = None) -> ICPResult:
     """Batched multi-frame ICP: vmap of the scan-based fixed-iteration loop.
 
     Registers ``sources[k]`` (B,N,3) onto ``targets[k]`` (B,M,3) in one
@@ -205,17 +275,20 @@ def icp_batch(sources: jax.Array, targets: jax.Array,
 
     ``src_valid`` (B,N) / ``dst_valid`` (B,M) mask bucket padding from
     ``repro.data.collate.collate_pairs``; ``initial_transforms`` is an
-    optional (B,4,4) warm start. Returns an ``ICPResult`` whose every leaf
-    has a leading batch axis.
+    optional (B,4,4) warm start; ``target_normals`` is an optional (B,M,3)
+    normal batch (auto-estimated per frame at trace scope when the plane
+    minimiser is on). Returns an ``ICPResult`` whose every leaf has a
+    leading batch axis.
     """
     b = sources.shape[0]
     if initial_transforms is None:
         initial_transforms = jnp.broadcast_to(
             jnp.eye(4, dtype=sources.dtype), (b, 4, 4))
 
-    def one(src, dst, T0, sv, dv):
+    def one(src, dst, T0, sv, dv, tn):
         return icp_fixed_iterations(src, dst, params, T0, nn_fn=nn_fn,
-                                    src_valid=sv, dst_valid=dv)
+                                    src_valid=sv, dst_valid=dv,
+                                    target_normals=tn)
 
     return jax.vmap(one)(sources, targets, initial_transforms,
-                         src_valid, dst_valid)
+                         src_valid, dst_valid, target_normals)

@@ -124,7 +124,8 @@ def nn_search(src: jax.Array, dst: jax.Array, *, chunk: int = 2048,
     init = (jnp.full((n,), jnp.inf, dtype=jnp.float32),
             jnp.zeros((n,), dtype=jnp.int32))
     bases = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
-    xs = (dst_chunks, bases) if valid_chunks is None else (dst_chunks, bases, valid_chunks)
+    xs = ((dst_chunks, bases) if valid_chunks is None
+          else (dst_chunks, bases, valid_chunks))
     (best_d2, best_idx), _ = jax.lax.scan(body, init, xs)
     # The expansion picks the right argmin but its cancellation
     # (sn + dn - 2·cross at scene scale) costs ~1e-4 absolute in the

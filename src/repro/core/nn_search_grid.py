@@ -35,11 +35,29 @@ from __future__ import annotations
 
 import functools
 import itertools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.data.voxelize import VoxelGrid, cell_coords, linear_cell_ids
+
+
+class GridQueryStats(NamedTuple):
+    """Diagnostics of one candidate-gather pass (all scalars, jittable).
+
+    ``overflow_frac``: fraction of queries with at least one in-bounds
+    neighbour cell truncated by ``max_per_cell`` — the silent-drop case the
+    exactness contract documents. ``empty_frac``: fraction of queries with
+    an empty neighbourhood (the rows that come back ``d2 = inf``).
+    ``dropped_frac``: truncated candidates as a fraction of all candidates
+    the neighbourhoods actually hold — how much of the scene the sweep
+    never saw.
+    """
+
+    overflow_frac: jax.Array
+    empty_frac: jax.Array
+    dropped_frac: jax.Array
 
 
 @functools.lru_cache(maxsize=None)
@@ -91,6 +109,34 @@ def gather_candidates(src: jax.Array, grid: VoxelGrid, max_per_cell: int,
     return cand_pts, cand_idx, cand_valid
 
 
+def neighborhood_stats(src: jax.Array, grid: VoxelGrid,
+                       max_per_cell: int = 32,
+                       rings: int = 1) -> GridQueryStats:
+    """Quantify what :func:`gather_candidates` would drop for these queries.
+
+    Pure table lookups on the grid's per-cell counts — no candidate gather,
+    so it is cheap enough to run per frame as a quality signal (the pyramid
+    engine exposes it as :meth:`~repro.core.pyramid.PyramidEngine.polish_stats`).
+    """
+    dims = grid.dims
+    icq = cell_coords(src, grid.origin, grid.voxel_size, dims)
+    off = jnp.asarray(_neighbor_offsets(rings), jnp.int32)
+    nbr = icq[:, None, :] + off[None]
+    in_bounds = jnp.all(
+        (nbr >= 0) & (nbr < jnp.asarray(dims, jnp.int32)), axis=-1)
+    cid = linear_cell_ids(jnp.clip(nbr, 0, jnp.asarray(dims, jnp.int32) - 1),
+                          dims)
+    cnt = jnp.where(in_bounds, grid.count[cid], 0)               # (N, C)
+    kept = jnp.minimum(cnt, max_per_cell)
+    dropped = jnp.sum(cnt - kept, axis=1).astype(jnp.float32)    # (N,)
+    total = jnp.sum(cnt, axis=1).astype(jnp.float32)
+    n = jnp.asarray(src.shape[0], jnp.float32)
+    return GridQueryStats(
+        overflow_frac=jnp.sum(jnp.any(cnt > max_per_cell, axis=1)) / n,
+        empty_frac=jnp.sum(jnp.sum(kept, axis=1) == 0) / n,
+        dropped_frac=jnp.sum(dropped) / jnp.maximum(jnp.sum(total), 1.0))
+
+
 def nn_search_grid(src: jax.Array, grid: VoxelGrid, *,
                    max_per_cell: int = 32,
                    rings: int = 1,
@@ -98,7 +144,8 @@ def nn_search_grid(src: jax.Array, grid: VoxelGrid, *,
                    dst: jax.Array | None = None,
                    dst_valid: jax.Array | None = None,
                    chunk: int = 2048,
-                   return_points: bool = False):
+                   return_points: bool = False,
+                   with_stats: bool = False):
     """NN of each src point among its grid neighbourhood candidates.
 
     Args:
@@ -115,11 +162,15 @@ def nn_search_grid(src: jax.Array, grid: VoxelGrid, *,
       dst / dst_valid / chunk: fallback inputs, matching ``nn_search``.
       return_points: additionally return the matched points (fused winner
         gather — see ``core.icp._default_correspond_fn``).
+      with_stats: additionally return a :class:`GridQueryStats` — the
+        overflow/empty/dropped diagnostics that were previously invisible
+        (inf rows and truncated cells fail silently otherwise).
 
     Returns:
-      (d2, idx[, matched]): exact squared distances (``+inf`` for empty
-      neighbourhoods without fallback), int32 indices into the original
-      target ordering, and optionally the (N, 3) matched points.
+      (d2, idx[, matched][, stats]): exact squared distances (``+inf`` for
+      empty neighbourhoods without fallback), int32 indices into the
+      original target ordering, optionally the (N, 3) matched points, and
+      optionally the gather diagnostics.
     """
     cand_pts, cand_idx, cand_valid = gather_candidates(src, grid,
                                                        max_per_cell, rings)
@@ -157,9 +208,12 @@ def nn_search_grid(src: jax.Array, grid: VoxelGrid, *,
         best_idx = jnp.where(has_cand, best_idx, fb_idx)
         matched = jnp.where(has_cand[:, None], matched, fb_pts)
 
+    out = [jnp.maximum(best_d2, 0.0), best_idx]
     if return_points:
-        return jnp.maximum(best_d2, 0.0), best_idx, matched
-    return jnp.maximum(best_d2, 0.0), best_idx
+        out.append(matched)
+    if with_stats:
+        out.append(neighborhood_stats(src, grid, max_per_cell, rings))
+    return tuple(out)
 
 
 def grid_nn_fn(grid: VoxelGrid, *, max_per_cell: int = 32, rings: int = 1):

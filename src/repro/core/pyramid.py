@@ -31,7 +31,8 @@ import jax.numpy as jnp
 
 from repro.core.engine import RegistrationEngine, register_engine
 from repro.core.icp import ICPParams, ICPResult, icp, icp_fixed_iterations
-from repro.core.nn_search_grid import grid_nn_fn
+from repro.core.nn_search_grid import (GridQueryStats, grid_nn_fn,
+                                       neighborhood_stats)
 from repro.data.voxelize import build_voxel_grid, voxel_downsample
 
 # Coarse schedule entries: (voxel_size_m, iterations[, max_points]).
@@ -97,10 +98,15 @@ def icp_pyramid(source: jax.Array, target: jax.Array,
                                        valid=src_valid)
         dst_l, dv_l = voxel_downsample(target, voxel, max_points=cap,
                                        valid=dst_valid)
+        # Coarse levels stay point-to-point, no robust reweighting: voxel
+        # centroids don't lie on the surfaces they summarise, so plane
+        # residuals (and fine-scale robust scales) are meaningless there —
+        # the coarse job is a cheap basin capture, the polish does quality.
         p_l = params._replace(
             max_iterations=iters,
             max_correspondence_distance=max(
-                params.max_correspondence_distance, 1.5 * voxel))
+                params.max_correspondence_distance, 1.5 * voxel),
+            minimizer="point_to_point", robust_kernel="none")
         res = icp_fixed_iterations(src_l, dst_l, p_l, initial_transform=T,
                                    src_valid=sv_l, dst_valid=dv_l)
         T = res.T
@@ -115,13 +121,47 @@ def icp_pyramid(source: jax.Array, target: jax.Array,
     else:
         nn_fn = grid_nn_fn(grid, max_per_cell=max_per_cell, rings=rings)
 
+    if params.minimizer == "point_to_plane":
+        # Polish goes plane: estimate target normals once at trace scope,
+        # reusing the resident polish grid as the neighbourhood structure
+        # (one counting-sort build serves both NN and normals).
+        from repro.data.normals import NormalParams, estimate_normals
+        np_l = NormalParams(voxel_size=gv, grid_dims=tuple(grid_dims),
+                            max_per_cell=max_per_cell, rings=rings)
+        normals, _ = estimate_normals(target, np_l, valid=dst_valid,
+                                      grid=grid)
+    else:
+        normals = None
+
     def correspond(src_t):
-        d2, _, matched = nn_fn(src_t)
-        return d2, matched
+        d2, idx, matched = nn_fn(src_t)
+        if normals is None:
+            return d2, matched
+        return d2, matched, jnp.take(normals, idx, axis=0)
 
     runner = icp_fixed_iterations if fixed else icp
     return runner(source, None, params, initial_transform=T,
                   correspond_fn=correspond, src_valid=src_valid)
+
+
+def polish_stats(source: jax.Array, target: jax.Array,
+                 params: ICPParams = ICPParams(), *,
+                 grid_dims: tuple[int, int, int] = DEFAULT_GRID_DIMS,
+                 grid_voxel: float | None = None,
+                 max_per_cell: int = 32, rings: int = 1,
+                 dst_valid: jax.Array | None = None) -> GridQueryStats:
+    """Overflow/empty diagnostics of the polish stage's candidate gather.
+
+    The grid NN silently truncates overflowing cells and returns ``inf``
+    for empty neighbourhoods (the documented exactness contract); this
+    builds the exact grid the polish would use and counts both effects for
+    the given source, so callers can check a scene/config before trusting
+    the pyramid result — or log it per frame in production.
+    """
+    gv = (float(grid_voxel) if grid_voxel is not None
+          else max(1.0, params.max_correspondence_distance))
+    grid = build_voxel_grid(target, gv, grid_dims, valid=dst_valid)
+    return neighborhood_stats(source, grid, max_per_cell, rings)
 
 
 class PyramidEngine(RegistrationEngine):
@@ -166,6 +206,20 @@ class PyramidEngine(RegistrationEngine):
                     grid_voxel=self._grid_voxel,
                     max_per_cell=self._max_per_cell, rings=self._rings,
                     use_kernel=self._use_kernel, interpret=self._interp())
+
+    def polish_stats(self, source, target,
+                     params: ICPParams | None = None, *,
+                     dst_valid=None) -> GridQueryStats:
+        """Candidate-gather diagnostics of this engine's polish stage (see
+        :func:`polish_stats`) — counts the cell-overflow drops and empty
+        (inf) rows the registration itself absorbs silently."""
+        params = self._default_params(params)
+        return polish_stats(jnp.asarray(source, jnp.float32),
+                            jnp.asarray(target, jnp.float32), params,
+                            grid_dims=self._grid_dims,
+                            grid_voxel=self._grid_voxel,
+                            max_per_cell=self._max_per_cell,
+                            rings=self._rings, dst_valid=dst_valid)
 
     def _build_single(self, params: ICPParams):
         kw = self._pyramid_kwargs()

@@ -19,7 +19,8 @@ from repro.core.svd3x3 import svd3x3
 
 
 def make_transform(R: jax.Array, t: jax.Array) -> jax.Array:
-    """Build a 4x4 homogeneous transform from rotation R (3,3) and translation t (3,)."""
+    """Build a 4x4 homogeneous transform from rotation R (3,3), translation
+    t (3,)."""
     T = jnp.eye(4, dtype=R.dtype)
     T = T.at[:3, :3].set(R)
     T = T.at[:3, 3].set(t.reshape(3))

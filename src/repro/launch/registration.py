@@ -32,6 +32,15 @@ def main(argv=None):
     ap.add_argument("--samples", type=int, default=4096)
     ap.add_argument("--engine", default="xla",
                     choices=["xla", "pallas", "distributed", "pyramid"])
+    ap.add_argument("--minimizer", default="point_to_point",
+                    choices=["point_to_point", "point_to_plane"],
+                    help="error metric: paper's point-to-point Kabsch or "
+                         "the plane-aware Gauss-Newton step (DESIGN.md §9)")
+    ap.add_argument("--robust", default="none",
+                    choices=["none", "huber", "tukey"],
+                    help="IRLS robust reweighting on top of the gate")
+    ap.add_argument("--robust-scale", type=float, default=0.5,
+                    help="robust kernel scale in metres")
     ap.add_argument("--per-frame", action="store_true",
                     help="loop FppsICP.align() per frame instead of one batch")
     ap.add_argument("--reduced", action="store_true",
@@ -42,7 +51,9 @@ def main(argv=None):
                        n_clutter=1700, extent=40.0, sensor_range=45.0)
            if args.reduced else SceneConfig())
     params = ICPParams(max_iterations=50, max_correspondence_distance=1.0,
-                       transformation_epsilon=1e-5)
+                       transformation_epsilon=1e-5,
+                       minimizer=args.minimizer, robust_kernel=args.robust,
+                       robust_scale=args.robust_scale)
 
     pairs = [frame_pair(args.seq, f, cfg, args.samples)
              for f in range(args.frames)]
@@ -57,6 +68,8 @@ def main(argv=None):
             reg.setMaxCorrespondenceDistance(1.0)
             reg.setMaxIterationCount(50)
             reg.setTransformationEpsilon(1e-5)
+            reg.setMinimizer(args.minimizer)
+            reg.setRobustKernel(args.robust, args.robust_scale)
             Ts.append(reg.align())
             rmses.append(reg.getFitnessScore())
         t_ours = time.time() - t0

@@ -13,16 +13,12 @@ dry-run proves out at the production mesh sizes.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke, list_archs
 from repro.data.tokens import PrefetchLoader, TokenStream
-from repro.launch.mesh import batch_axes_for
-from repro.launch.partition import param_sharding, partitioning
 from repro.optim import cosine_schedule, pick_optimizer
 from repro.train import checkpoint as ckpt_lib
 from repro.train import train_step as ts

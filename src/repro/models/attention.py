@@ -15,8 +15,6 @@ Implementation notes
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

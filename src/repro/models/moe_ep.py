@@ -23,15 +23,12 @@ the same semantics as the gspmd_sort path.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.models import layers as L
 from repro.models.moe import MoEConfig, capacity, route
-
-from repro.compat import shard_map
 
 
 def _local_dispatch(flat, weights, idx, e: int, c: int):

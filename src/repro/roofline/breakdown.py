@@ -94,7 +94,6 @@ def main():
     from repro.configs.registry import get_shape
     from repro.launch.partition import param_sharding, partitioning
     from repro.launch.specs import batch_specs, sharding_for_axes
-    from repro.models import lm
     from repro.optim import cosine_schedule, pick_optimizer
     from repro.train import train_step as ts
 

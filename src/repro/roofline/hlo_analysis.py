@@ -25,7 +25,6 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from collections import defaultdict
 from typing import Dict, List
 
 _DTYPE_BYTES = {

@@ -7,8 +7,6 @@ out of scope for the paper's workload.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

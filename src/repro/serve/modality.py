@@ -13,12 +13,9 @@ quantisation math and the NN search.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from repro.core.nn_search import nn_search
 
 
 def _pad3(x: jax.Array, d: int) -> jax.Array:

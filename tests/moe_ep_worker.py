@@ -2,7 +2,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.launch.partition import partitioning
-from repro.models.moe import MoEConfig, moe_init, moe_forward, moe_forward_dense
+from repro.models.moe import MoEConfig, moe_init, moe_forward_dense
 from repro.models.moe_ep import moe_forward_ep
 
 from repro.compat import make_mesh

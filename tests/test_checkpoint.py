@@ -1,18 +1,12 @@
 """Checkpointing + fault-tolerance behaviours."""
-import os
-import threading
-import time
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_smoke
-from repro.models import lm
 from repro.optim import adamw, cosine_schedule
 from repro.train import checkpoint as ckpt
-from repro.train.train_step import TrainState, init_state
+from repro.train.train_step import init_state
 
 
 @pytest.fixture

@@ -131,6 +131,30 @@ def test_different_params_get_separate_cache_entries():
     assert eng.trace_count == 2
 
 
+def test_minimizer_fields_get_separate_cache_entries():
+    """ISSUE 3 regression: params differing only in the minimizer/robust
+    fields must never reuse a stale executable — a cached point-to-point
+    program served for a point-to-plane request would silently return the
+    wrong math."""
+    eng = XLAEngine(chunk=256)
+    src, dst, _ = _pair(jax.random.PRNGKey(7))
+    variants = [
+        PARAMS,
+        PARAMS._replace(minimizer="point_to_plane"),
+        PARAMS._replace(robust_kernel="huber"),
+        PARAMS._replace(robust_kernel="huber", robust_scale=0.1),
+        PARAMS._replace(minimizer="point_to_plane", robust_kernel="tukey"),
+    ]
+    for p in variants:
+        eng.register(src, dst, p)
+    assert eng.trace_count == len(variants), eng.traces
+    assert len(eng._cache) == len(variants)
+    # and repeating every variant stays cache-hot
+    for p in variants:
+        eng.register(src, dst, p)
+    assert eng.trace_count == len(variants), eng.traces
+
+
 def test_engine_chunk_default_feeds_params():
     """get_engine(..., chunk=...) is the default ICPParams chunk when the
     caller passes no explicit params."""

@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 
 from repro.core.transform import random_rigid_transform
-from repro.kernels.nn_search import nn_search_kernel, vmem_bytes
+from repro.kernels.nn_search import vmem_bytes
 from repro.kernels.ops import make_frame_engine, nn_search_pallas
 from repro.kernels.ref import (augment_source, augment_target, nn_search_ref,
                                nn_search_ref_blocked)

@@ -1,10 +1,10 @@
 """MoE routing + dispatch tests: sorted dispatch vs dense reference,
 router semantics, capacity-drop accounting."""
-from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from _hypothesis_compat import hypothesis, st
 from repro.models.moe import (MoEConfig, capacity, moe_forward,
                               moe_forward_dense, moe_init, route)
 

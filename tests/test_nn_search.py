@@ -1,10 +1,10 @@
 """XLA brute-force NN search vs naive reference."""
-from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import hypothesis, st
 from repro.core.nn_search import nn_search, pairwise_sq_dists
 
 

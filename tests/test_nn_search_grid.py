@@ -13,7 +13,7 @@ import pytest
 
 from repro.core.nn_search import nn_search
 from repro.core.nn_search_grid import gather_candidates, nn_search_grid
-from repro.data.collate import collate_pairs, pad_cloud
+from repro.data.collate import collate_pairs
 from repro.data.voxelize import build_voxel_grid
 from repro.kernels.nn_search_grid import nn_search_grid_pallas
 
@@ -160,3 +160,50 @@ def test_gather_candidates_mask_semantics():
     # masked slots carry the far sentinel; valid slots carry real points
     assert bool(jnp.all(jnp.where(valid[..., None], jnp.abs(pts) < 1e3,
                                   pts == 1e15)))
+
+
+def test_overflow_stats_pinned():
+    """ISSUE 3 satellite: cell-overflow drops and empty (inf) rows are
+    countable instead of silent."""
+    from repro.core.nn_search_grid import neighborhood_stats
+
+    rng = np.random.default_rng(3)
+    # 100 points clumped inside one 2 m cell of a 4x4x4 lattice.
+    clump = rng.uniform(0.0, 1.0, (100, 3)).astype(np.float32)
+    grid = build_voxel_grid(jnp.asarray(clump), 2.0, (4, 4, 4),
+                            origin=jnp.zeros(3))
+    # query A sits in the clump (overflowing cell); query B in an empty
+    # far corner whose whole 27-neighbourhood is unoccupied.
+    src = jnp.asarray([[0.5, 0.5, 0.5], [7.5, 7.5, 7.5]], jnp.float32)
+    stats = jax.jit(lambda s: neighborhood_stats(s, grid, max_per_cell=8))(
+        src)
+    assert float(stats.overflow_frac) == 0.5   # A only
+    assert float(stats.empty_frac) == 0.5      # B only
+    # A's neighbourhood holds 100 candidates, 8 kept -> 92 dropped.
+    np.testing.assert_allclose(float(stats.dropped_frac), 92.0 / 100.0)
+
+    # the searcher surfaces the same stats inline, and B's row is inf
+    d2, idx, stats2 = nn_search_grid(src, grid, max_per_cell=8,
+                                     with_stats=True)
+    assert float(stats2.overflow_frac) == 0.5
+    assert np.isinf(float(d2[1]))
+
+    # with a generous capacity nothing overflows and nothing is dropped
+    relaxed = neighborhood_stats(src, grid, max_per_cell=128)
+    assert float(relaxed.overflow_frac) == 0.0
+    assert float(relaxed.dropped_frac) == 0.0
+
+
+def test_pyramid_polish_stats_surface():
+    from repro.core.pyramid import PyramidEngine
+
+    src, dst = _clouds(9, n=64, m=2000)
+    eng = PyramidEngine(chunk=256)
+    stats = eng.polish_stats(src, dst)
+    # dense uniform scene, capacity 32 per 1 m cell: nothing drops
+    assert float(stats.empty_frac) < 0.2
+    assert 0.0 <= float(stats.overflow_frac) <= 1.0
+    tight = PyramidEngine(chunk=256, max_per_cell=2)
+    stats_tight = tight.polish_stats(src, dst)
+    assert float(stats_tight.overflow_frac) > float(stats.overflow_frac) - 1e-9
+    assert float(stats_tight.dropped_frac) > 0.0

@@ -1,0 +1,146 @@
+"""Normal-estimation subsystem: accuracy on analytic surfaces, masking,
+orientation, XLA/Pallas parity, and batch vmapping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.collate import PAD_SENTINEL
+from repro.data.normals import (NormalParams, estimate_normals,
+                                estimate_normals_batch, moments_to_normals,
+                                orient_normals)
+from repro.kernels.normals import estimate_normals_pallas
+
+GRID = dict(voxel_size=1.0, grid_dims=(32, 32, 16), chunk=512)
+
+
+def _plane_cloud(n=2500, seed=0, normal=(0.3, -0.2, 1.0), z0=4.0,
+                 noise=0.01):
+    """Points on the plane n·x = n_z*z0, in a 20 m square patch."""
+    rng = np.random.default_rng(seed)
+    nv = np.asarray(normal, np.float64)
+    nv = nv / np.linalg.norm(nv)
+    xy = rng.uniform(-10, 10, (n, 2))
+    # solve n_x x + n_y y + n_z z = n_z z0 for z
+    z = z0 - (nv[0] * xy[:, 0] + nv[1] * xy[:, 1]) / nv[2]
+    pts = np.column_stack([xy, z]) + rng.normal(0, noise, (n, 3))
+    return pts.astype(np.float32), nv.astype(np.float32)
+
+
+@pytest.mark.parametrize("neighborhood", ["knn", "radius"])
+def test_plane_normals(neighborhood):
+    pts, n_true = _plane_cloud()
+    params = NormalParams(neighborhood=neighborhood, k=16, radius=0.8,
+                          **GRID)
+    normals, valid = jax.jit(
+        lambda p: estimate_normals(p, params))(jnp.asarray(pts))
+    normals, valid = np.asarray(normals), np.asarray(valid)
+    assert valid.mean() > 0.99
+    dots = np.abs(normals[valid] @ n_true)
+    assert np.median(dots) > 0.999
+    # the tail (sparse patch-edge neighbourhoods) may tilt, but not flip
+    assert np.quantile(dots, 0.01) > 0.95
+    # unit length wherever valid
+    np.testing.assert_allclose(np.linalg.norm(normals[valid], axis=1),
+                               1.0, atol=1e-5)
+
+
+def test_orientation_toward_viewpoint():
+    pts, n_true = _plane_cloud(z0=5.0)
+    normals, valid = estimate_normals(jnp.asarray(pts), NormalParams(**GRID))
+    normals, valid = np.asarray(normals), np.asarray(valid)
+    # viewpoint (origin) is below the z0=5 plane: normals must face down,
+    # i.e. have negative dot with the +z-ish true normal.
+    signed = normals[valid] @ n_true
+    assert (signed < 0).mean() > 0.99
+    # explicit viewpoint above the plane flips them
+    up, _ = estimate_normals(jnp.asarray(pts), NormalParams(**GRID),
+                             viewpoint=jnp.asarray([0.0, 0.0, 100.0]))
+    signed_up = np.asarray(up)[valid] @ n_true
+    assert (signed_up > 0).mean() > 0.99
+
+
+def test_degenerate_neighborhood_invalid():
+    # A straight line: no plane is defined; normals must be masked out.
+    t = np.linspace(0, 5, 64, dtype=np.float32)
+    line = np.stack([t, 0.3 * t, 0.1 * t], axis=1)
+    normals, valid = estimate_normals(
+        jnp.asarray(line), NormalParams(k=8, **GRID))
+    assert not bool(np.asarray(valid).any())
+    np.testing.assert_array_equal(np.asarray(normals), 0.0)
+
+
+def test_padded_rows_masked():
+    pts, _ = _plane_cloud(n=500)
+    padded = np.concatenate(
+        [pts, np.full((100, 3), PAD_SENTINEL, np.float32)])
+    valid = np.concatenate([np.ones(500, bool), np.zeros(100, bool)])
+    normals, nvalid = estimate_normals(jnp.asarray(padded),
+                                       NormalParams(**GRID),
+                                       valid=jnp.asarray(valid))
+    nvalid = np.asarray(nvalid)
+    assert not nvalid[500:].any()
+    np.testing.assert_array_equal(np.asarray(normals)[500:], 0.0)
+    # padded rows do not perturb the real rows' normals
+    ref, ref_valid = estimate_normals(jnp.asarray(pts), NormalParams(**GRID))
+    both = nvalid[:500] & np.asarray(ref_valid)
+    np.testing.assert_allclose(np.asarray(normals)[:500][both],
+                               np.asarray(ref)[both], atol=1e-4)
+
+
+def test_pallas_moment_sweep_matches_xla_radius():
+    pts, _ = _plane_cloud(n=1500, seed=3)
+    params = NormalParams(neighborhood="radius", radius=0.8, **GRID)
+    n_x, v_x = estimate_normals(jnp.asarray(pts), params)
+    n_p, v_p = jax.jit(
+        lambda p: estimate_normals_pallas(p, params, interpret=True))(
+            jnp.asarray(pts))
+    np.testing.assert_array_equal(np.asarray(v_x), np.asarray(v_p))
+    both = np.asarray(v_x)
+    np.testing.assert_allclose(np.asarray(n_x)[both], np.asarray(n_p)[both],
+                               atol=1e-4)
+
+
+def test_pallas_requires_radius_mode():
+    pts, _ = _plane_cloud(n=200)
+    with pytest.raises(ValueError, match="radius-mode"):
+        estimate_normals_pallas(jnp.asarray(pts),
+                                NormalParams(neighborhood="knn", **GRID))
+
+
+def test_unknown_neighborhood_raises():
+    pts, _ = _plane_cloud(n=200)
+    with pytest.raises(ValueError, match="unknown neighborhood"):
+        estimate_normals(jnp.asarray(pts),
+                         NormalParams(neighborhood="ball", **GRID))
+
+
+def test_batch_matches_per_frame():
+    a, _ = _plane_cloud(n=600, seed=1)
+    b, _ = _plane_cloud(n=600, seed=2, normal=(0.0, 0.4, 1.0))
+    batch = jnp.stack([jnp.asarray(a), jnp.asarray(b)])
+    params = NormalParams(**GRID)
+    n_b, v_b = jax.jit(
+        lambda x: estimate_normals_batch(x, params))(batch)
+    for i, cloud in enumerate([a, b]):
+        n_1, v_1 = estimate_normals(jnp.asarray(cloud), params)
+        np.testing.assert_array_equal(np.asarray(v_b[i]), np.asarray(v_1))
+        np.testing.assert_allclose(np.asarray(n_b[i]), np.asarray(n_1),
+                                   atol=1e-5)
+
+
+def test_moments_epilogue_zero_count():
+    # Empty neighbourhoods must come back invalid with zero normals, not NaN.
+    cnt = jnp.zeros((4,))
+    s = jnp.zeros((4, 3))
+    ss = jnp.zeros((4, 3, 3))
+    normals, valid = moments_to_normals(cnt, s, ss)
+    assert not bool(valid.any())
+    np.testing.assert_array_equal(np.asarray(normals), 0.0)
+
+
+def test_orient_normals_identity_when_aligned():
+    pts = jnp.asarray([[0.0, 0.0, -1.0]])
+    n = jnp.asarray([[0.0, 0.0, 1.0]])  # already faces origin from below
+    np.testing.assert_array_equal(np.asarray(orient_normals(pts, n)),
+                                  np.asarray(n))

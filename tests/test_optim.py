@@ -1,7 +1,6 @@
 """Optimizer + roofline-analyzer unit tests."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.optim import adafactor, adamw, clip_by_global_norm, cosine_schedule

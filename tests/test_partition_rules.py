@@ -1,8 +1,5 @@
 """Partitioning-rule engine unit tests (no multi-device mesh needed: these
 exercise the pure-python rule resolution used by the dry-run)."""
-import types
-
-import jax
 import pytest
 
 from repro.configs import get_config

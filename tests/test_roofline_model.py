@@ -1,12 +1,11 @@
 """Roofline HLO-analyzer edge cases beyond test_optim.py's basics."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.roofline.hlo_analysis import (_shape_bytes_elems, analyze_hlo)
-from repro.roofline.report import V5E, model_flops, roofline_terms
 from repro.configs import get_config
 from repro.configs.base import SHAPES
+from repro.roofline.hlo_analysis import _shape_bytes_elems, analyze_hlo
+from repro.roofline.report import model_flops, roofline_terms
 
 
 def test_shape_parsing():
@@ -38,7 +37,6 @@ def test_dus_counted_at_slice_size():
 
 
 def test_reduce_scatter_and_permute_counted():
-    import subprocess, sys, textwrap  # pragma: no cover - inline check
     # covered indirectly by dry-run artifacts; here check the regexes accept
     # async start forms
     hlo = """

@@ -1,11 +1,11 @@
 """SSD (Mamba-2) and RG-LRU unit tests: chunked == naive recurrence,
 streaming == full, padding exactness."""
-from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import hypothesis, st
 from repro.models.ssm import (RGLRUConfig, SSMConfig, mamba2_decode_step,
                               mamba2_forward, mamba2_init, mamba2_init_state,
                               rglru_block_forward, rglru_block_init,

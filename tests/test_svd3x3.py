@@ -1,10 +1,10 @@
 """svd3x3: reconstruction, orthogonality, singular-value parity, degeneracy."""
-from _hypothesis_compat import hnp, hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import hnp, hypothesis, st
 from repro.core.svd3x3 import svd3x3, svd3x3_batched
 
 DEGENERATE = [

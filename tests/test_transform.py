@@ -1,9 +1,9 @@
 """SE(3) utilities + Kabsch estimation properties."""
-from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from _hypothesis_compat import hypothesis, st
 from repro.core import transform as tf
 
 

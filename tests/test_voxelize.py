@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data.collate import PAD_SENTINEL, pad_cloud
 from repro.data.voxelize import (build_voxel_grid, cell_coords,

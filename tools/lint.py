@@ -1,0 +1,236 @@
+"""Project linter: ruff when available, a stdlib fallback otherwise.
+
+CI installs ruff and gets the full ``[tool.ruff]`` behaviour from
+pyproject.toml. The benchmark container this repo grows in cannot install
+packages, so ``make lint`` falls back to this module's stdlib
+implementation of the same rule set:
+
+  E999  syntax errors (ast.parse)
+  E501  line too long (``line-length`` from pyproject, default 88)
+  W191  tab in indentation
+  W291  trailing whitespace
+  W293  whitespace on blank line
+  F401  imported but unused (respects ``__all__`` and ``# noqa``)
+  I001  unsorted/unsectioned imports (simplified: module-level order and
+        stdlib / third-party / first-party section separation)
+
+The fallback is deliberately a *subset* interpreter of the ruff config —
+anything it flags, ruff flags too — so a green fallback run is a sound
+local approximation and the CI job stays the source of truth.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import shutil
+import subprocess
+import sys
+import sysconfig
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+LINE_LENGTH = 88
+FIRST_PARTY = ("repro", "benchmarks", "tests", "tools", "examples",
+               "_hypothesis_compat")
+
+# Mirror of [tool.ruff.lint.per-file-ignores] in pyproject.toml.
+PER_FILE_IGNORES = {
+    "tests/*_worker.py": {"E501", "I001"},
+    "tests/test_roofline_model.py": {"E501"},
+}
+
+_NOQA = re.compile(r"#\s*noqa", re.IGNORECASE)
+
+
+def _stdlib_modules() -> frozenset:
+    names = set(getattr(sys, "stdlib_module_names", ()))
+    if not names:  # pragma: no cover - python < 3.10
+        names = {p.stem for p in pathlib.Path(
+            sysconfig.get_paths()["stdlib"]).iterdir()}
+    return frozenset(names)
+
+
+STDLIB = _stdlib_modules()
+
+
+def _import_section(module: str) -> int:
+    """0 = __future__, 1 = stdlib, 2 = third-party, 3 = first-party."""
+    root = module.split(".")[0]
+    if root == "__future__":
+        return 0
+    if root in FIRST_PARTY:
+        return 3
+    if root in STDLIB:
+        return 1
+    return 2
+
+
+def _iter_files():
+    # -co --exclude-standard: tracked AND untracked-but-not-ignored files,
+    # so a new module is linted before its first `git add`.
+    out = subprocess.run(
+        ["git", "ls-files", "-co", "--exclude-standard", "--", "*.py"],
+        cwd=REPO_ROOT, capture_output=True, text=True)
+    if out.returncode == 0 and out.stdout.strip():
+        return [REPO_ROOT / line for line in out.stdout.splitlines()]
+    return sorted(REPO_ROOT.rglob("*.py"))  # pragma: no cover - no git
+
+
+def _check_lines(path, text, problems):
+    for i, line in enumerate(text.splitlines(), 1):
+        stripped = line.rstrip("\n")
+        if len(stripped) > LINE_LENGTH and not _NOQA.search(stripped):
+            problems.append((path, i, "E501",
+                             f"line too long ({len(stripped)} > "
+                             f"{LINE_LENGTH})"))
+        if stripped != stripped.rstrip():
+            code = "W293" if not stripped.strip() else "W291"
+            problems.append((path, i, code, "trailing whitespace"))
+        indent = stripped[:len(stripped) - len(stripped.lstrip())]
+        if "\t" in indent:
+            problems.append((path, i, "W191", "tab in indentation"))
+
+
+def _dunder_all(tree) -> set:
+    names = set()
+    for node in tree.body:
+        if (isinstance(node, ast.Assign)
+                and any(isinstance(t, ast.Name) and t.id == "__all__"
+                        for t in node.targets)
+                and isinstance(node.value, (ast.List, ast.Tuple))):
+            for elt in node.value.elts:
+                if isinstance(elt, ast.Constant) and isinstance(
+                        elt.value, str):
+                    names.add(elt.value)
+    return names
+
+
+def _check_unused_imports(path, text, tree, problems):
+    lines = text.splitlines()
+    exported = _dunder_all(tree)
+    used = {n.id for n in ast.walk(tree) if isinstance(n, ast.Name)}
+    # names referenced inside string annotations / docstring doctests are
+    # out of scope for the fallback; `# noqa` handles intentional ones.
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.Import, ast.ImportFrom)):
+            continue
+        if isinstance(node, ast.ImportFrom) and node.module == "__future__":
+            continue
+        line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+        if _NOQA.search(line):
+            continue
+        for alias in node.names:
+            if alias.name == "*":
+                continue
+            bound = alias.asname or alias.name.split(".")[0]
+            if alias.asname and alias.asname == alias.name:
+                continue  # explicit re-export convention
+            if bound in used or bound in exported:
+                continue
+            problems.append((path, node.lineno, "F401",
+                             f"{alias.name!r} imported but unused"))
+
+
+def _check_import_order(path, text, tree, problems):
+    """Simplified I001, mirroring isort's normal form:
+
+    * a *run* is a maximal sequence of top-level imports with no other
+      statement in between; blank lines split a run into *blocks*;
+    * each block must hold a single section (stdlib / third-party /
+      first-party...), sorted with straight imports before from-imports;
+    * across the blocks of a run, sections must strictly increase (blank
+      line = section boundary; a same-section split is a violation too).
+    """
+    lines = text.splitlines()
+    run: list = []
+    runs = [run]
+    block: list = []
+    last_line = None
+    for node in tree.body:
+        if not isinstance(node, (ast.Import, ast.ImportFrom)):
+            if run:
+                run = []
+                runs.append(run)
+            block = []
+            last_line = None
+            continue
+        if not block or (last_line is not None
+                         and node.lineno > last_line + 1):
+            block = []
+            run.append(block)
+        line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+        last_line = getattr(node, "end_lineno", node.lineno)
+        if _NOQA.search(line):
+            continue
+        if isinstance(node, ast.ImportFrom):
+            module = "." * node.level + (node.module or "")
+            is_from = 1
+        else:
+            module = node.names[0].name
+            is_from = 0
+        # isort default: straight imports precede from-imports per section
+        block.append((node.lineno, _import_section(module), is_from,
+                      module.lower()))
+    for run in runs:
+        blocks = [b for b in run if b]
+        prev_section = -1
+        for blk in blocks:
+            sections = {sec for _, sec, _, _ in blk}
+            keys = [k[1:] for k in blk]
+            if len(sections) > 1 or keys != sorted(keys):
+                problems.append((path, blk[0][0], "I001",
+                                 "imports unsorted within block (one "
+                                 "section per block, straight before "
+                                 "from-imports, alphabetical)"))
+                continue
+            sec = next(iter(sections))
+            if sec <= prev_section:
+                problems.append((path, blk[0][0], "I001",
+                                 "import sections out of order across "
+                                 "blank-line blocks"))
+            prev_section = sec
+    return
+
+
+def _ignored(rel: pathlib.Path, code: str) -> bool:
+    import fnmatch
+    rel_s = str(rel)
+    return any(code in codes for pat, codes in PER_FILE_IGNORES.items()
+               if fnmatch.fnmatch(rel_s, pat))
+
+
+def run_fallback() -> int:
+    problems: list = []
+    for path in _iter_files():
+        text = path.read_text()
+        rel = path.relative_to(REPO_ROOT)
+        try:
+            tree = ast.parse(text)
+        except SyntaxError as e:
+            problems.append((rel, e.lineno or 0, "E999", e.msg))
+            continue
+        file_problems: list = []
+        _check_lines(rel, text, file_problems)
+        _check_unused_imports(rel, text, tree, file_problems)
+        _check_import_order(rel, text, tree, file_problems)
+        problems.extend(p for p in file_problems
+                        if not _ignored(rel, p[2]))
+    for path, line, code, msg in sorted(problems):
+        print(f"{path}:{line}: {code} {msg}")
+    if problems:
+        print(f"\n{len(problems)} problem(s) "
+              f"(stdlib fallback linter; install ruff for the full set)")
+        return 1
+    print("lint clean (stdlib fallback; install ruff for the full set)")
+    return 0
+
+
+def main() -> int:
+    ruff = shutil.which("ruff")
+    if ruff:
+        return subprocess.run([ruff, "check", "."], cwd=REPO_ROOT).returncode
+    return run_fallback()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
