@@ -5,18 +5,23 @@ the committed baselines, fail loudly on a >20% regression.
     make bench-guard
 
 Baselines are the committed ``BENCH_nn.json`` / ``BENCH_throughput.json``
-at the repo root. The guard re-measures in quick mode (small scenes, so it
-finishes in CI minutes) and compares only metrics that are *comparable*
-across the two configurations:
+/ ``BENCH_odometry.json`` at the repo root. The guard re-measures in quick
+mode (small scenes, so it finishes in CI minutes) and compares only
+metrics that are *comparable* across the two configurations:
 
   * **ratio metrics** (grid-NN speedup at a shared M, batched-vs-looped
-    throughput speedup) — hardware-speed-independent to first order, since
-    numerator and denominator are measured in the same process on the same
-    machine. Guarded at ``current >= (1 - tolerance) * baseline``.
+    throughput speedup, scan-to-map fps speedup) — hardware-speed-
+    independent to first order, since numerator and denominator are
+    measured in the same process on the same machine. Guarded at
+    ``current >= (1 - tolerance) * baseline``. Timed ratio metrics are the
+    **median of 3 repeated measurements**: wall clock on this container
+    swings ~15% run-to-run against a 20% tolerance, so a single shot is
+    one bad scheduler tick from a false red; the repeats share the
+    process-wide jit cache, so only the first pays compilation.
   * **correctness metrics** (gated NN agreement, batch-vs-loop transform
-    agreement, pyramid parity) — machine-independent; agreement fractions
-    are guarded relative to baseline, absolute error bounds are re-asserted
-    directly.
+    agreement, pyramid parity, odometry drift) — machine-independent and
+    deterministic at fixed seeds; taken single-shot from the first run,
+    guarded relative to baseline or against absolute error bounds.
 
 Wall-clock *absolute* numbers are deliberately not compared: the committed
 baselines may come from a different machine. The quick re-run writes its
@@ -28,12 +33,22 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import statistics
 import sys
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 NN_BASELINE = REPO_ROOT / "BENCH_nn.json"
 THROUGHPUT_BASELINE = REPO_ROOT / "BENCH_throughput.json"
+ODOMETRY_BASELINE = REPO_ROOT / "BENCH_odometry.json"
 DEFAULT_TOLERANCE = 0.20
+# Median-of-N for timed ratio metrics (see module docstring). Absolute /
+# correctness metrics stay single-shot — they are deterministic, repeats
+# only add CI minutes.
+TIMED_REPEATS = 3
+
+
+def _median(runs: list[dict], extract) -> float:
+    return float(statistics.median(extract(r) for r in runs))
 
 
 class Guard:
@@ -79,14 +94,21 @@ def check_nn(guard: Guard) -> None:
     # ratio to be comparable) — but a CI-fast scene.
     scene = SceneConfig(n_ground=40_000, n_walls=30_000, n_poles=8_000,
                         n_clutter=9_000, extent=40.0, sensor_range=45.0)
-    nn_sweep.run(sizes=(16_384,), samples=4096, parity=False, scene=scene,
-                 mitigation=False,  # rings=2 row isn't compared — skip it
-                 out_json=str(REPO_ROOT / "BENCH_nn_guard.json"))
-    current = json.loads((REPO_ROOT / "BENCH_nn_guard.json").read_text())
-    cur = current["sweeps"][0]
+
+    def measure() -> dict:
+        nn_sweep.run(sizes=(16_384,), samples=4096, parity=False,
+                     scene=scene,
+                     mitigation=False,  # rings=2 row isn't compared — skip
+                     out_json=str(REPO_ROOT / "BENCH_nn_guard.json"))
+        return json.loads((REPO_ROOT / "BENCH_nn_guard.json").read_text())
+
+    runs = [measure() for _ in range(TIMED_REPEATS)]
     ref = base_rows[(16_384, 1)]
-    guard.ratio("nn/grid_speedup_m16k", cur["speedup"], ref["speedup"])
-    guard.ratio("nn/agree_gated_m16k", cur["agree_gated"],
+    guard.ratio("nn/grid_speedup_m16k",
+                _median(runs, lambda r: r["sweeps"][0]["speedup"]),
+                ref["speedup"])
+    # agreement is deterministic, not timed: single-shot from the first run
+    guard.ratio("nn/agree_gated_m16k", runs[0]["sweeps"][0]["agree_gated"],
                 ref["agree_gated"])
     # Pyramid-vs-brute ICP parity from the committed full run is an
     # absolute contract (the ISSUE-2 acceptance bound), re-assert it.
@@ -100,37 +122,81 @@ def check_throughput(guard: Guard) -> None:
     from benchmarks import registration_throughput
 
     baseline = json.loads(THROUGHPUT_BASELINE.read_text())
-    # full-mode config (tiny clouds, seconds of work) so batch/iters match
-    # the committed baseline exactly and the speedup ratio is comparable
-    registration_throughput.run(
-        batch=baseline["batch"], n=baseline["n"], m=baseline["m"],
-        iters=baseline["iters"],
-        out_json=str(REPO_ROOT / "BENCH_throughput_guard.json"))
-    current = json.loads(
-        (REPO_ROOT / "BENCH_throughput_guard.json").read_text())
+
+    def measure() -> dict:
+        # full-mode config (tiny clouds, seconds of work) so batch/iters
+        # match the committed baseline exactly and the speedup ratio is
+        # comparable
+        registration_throughput.run(
+            batch=baseline["batch"], n=baseline["n"], m=baseline["m"],
+            iters=baseline["iters"],
+            out_json=str(REPO_ROOT / "BENCH_throughput_guard.json"))
+        return json.loads(
+            (REPO_ROOT / "BENCH_throughput_guard.json").read_text())
+
+    runs = [measure() for _ in range(TIMED_REPEATS)]
     # The looped path is dispatch-dominated on these tiny clouds and its
-    # wall clock swings ~2.5x run-to-run on shared CI hardware, so the
-    # speedup ratio gets a wider band — a genuine regression (batching
-    # collapses toward 1x) still lands far below 40% of any healthy
-    # baseline, while scheduler noise does not.
-    guard.ratio("throughput/batched_speedup", current["speedup"],
+    # wall clock swings ~2.5x run-to-run on shared CI hardware, so even
+    # the median-of-3 speedup ratio keeps a wider band — a genuine
+    # regression (batching collapses toward 1x) still lands far below 40%
+    # of any healthy baseline, while scheduler noise does not.
+    guard.ratio("throughput/batched_speedup",
+                _median(runs, lambda r: r["speedup"]),
                 baseline["speedup"], tolerance=0.6)
     # batch-vs-loop agreement is a hard correctness bound, not a trend
     guard.absolute("throughput/transform_agreement",
-                   current["max_abs_transform_diff"], 1e-4)
+                   runs[0]["max_abs_transform_diff"], 1e-4)
+
+
+def check_odometry(guard: Guard) -> None:
+    from benchmarks import odometry_drift
+
+    baseline = json.loads(ODOMETRY_BASELINE.read_text())
+    # One full re-run of the baseline config (~2 min steady state). No
+    # TIMED_REPEATS here: the stream's fps is already a mean over >= 12
+    # steady-state frames per sequence, which medians out scheduler ticks
+    # the way a single batched-call timing cannot — and drift / iteration
+    # counts are deterministic at fixed seeds, so repeats add nothing.
+    odometry_drift.run(
+        seqs=tuple(baseline["seqs"]), frames=baseline["frames"],
+        samples=baseline["samples"], iters=baseline["iters"],
+        engine=baseline["engine"],
+        out_json=str(REPO_ROOT / "BENCH_odometry_guard.json"))
+    current = json.loads(
+        (REPO_ROOT / "BENCH_odometry_guard.json").read_text())
+    # Deterministic trajectory metrics: tight default tolerance.
+    guard.absolute("odometry/final_drift_s2m",
+                   current["drift_final_s2m_max"], 0.5)
+    guard.ratio("odometry/drift_advantage",
+                current["drift_advantage_min"],
+                baseline["drift_advantage_min"])
+    guard.ratio("odometry/warm_iter_speedup",
+                current["warm_iter_speedup"],
+                baseline["warm_iter_speedup"])
+    # Wall-clock throughput: only the runtime-weighted *speedup* is
+    # guarded — a same-process ratio, first-order machine-independent
+    # like throughput/batched_speedup. The absolute fps_weighted number
+    # is recorded in BENCH_odometry.json for trend reading but never
+    # compared across machines (module policy above).
+    guard.ratio("odometry/runtime_weighted_speedup",
+                current["runtime_weighted_speedup"],
+                baseline["runtime_weighted_speedup"], tolerance=0.4)
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
                     help="allowed fractional regression (default 0.20)")
-    ap.add_argument("--only", choices=["nn", "throughput"], default=None)
+    ap.add_argument("--only", choices=["nn", "throughput", "odometry"],
+                    default=None)
     args = ap.parse_args(argv)
     guard = Guard(args.tolerance)
     if args.only in (None, "nn"):
         check_nn(guard)
     if args.only in (None, "throughput"):
         check_throughput(guard)
+    if args.only in (None, "odometry"):
+        check_odometry(guard)
     ok = guard.report()
     if not ok:
         print(f"\nbench-guard: regression beyond "

@@ -12,6 +12,9 @@
                                          also writes BENCH_nn.json)
   convergence -> convergence         (p2p vs p2plane vs pyramid iteration
                                          counts; writes BENCH_convergence.json)
+  odometry -> odometry_drift         (scan-to-map vs frame-to-frame drift +
+                                         runtime-weighted frames/s;
+                                         writes BENCH_odometry.json)
 
 ``--quick`` runs every suite in smoke mode (reduced scenes, 2 frames,
 fewer iterations) so CI can exercise all entry points in seconds.
@@ -23,9 +26,9 @@ import sys
 import traceback
 
 from benchmarks import (convergence, kernel_resources, nn_sweep,
-                        power_efficiency, registration_accuracy,
-                        registration_latency, registration_throughput,
-                        roofline_report)
+                        odometry_drift, power_efficiency,
+                        registration_accuracy, registration_latency,
+                        registration_throughput, roofline_report)
 from benchmarks.common import QUICK_SCENE, emit
 
 SUITES = {
@@ -37,6 +40,7 @@ SUITES = {
     "throughput": registration_throughput.run,
     "nn_sweep": nn_sweep.run,
     "convergence": convergence.run,
+    "odometry": odometry_drift.run,
 }
 
 # Smoke-mode kwargs per suite (reduced scenes, 2 frames, short loops).
@@ -49,7 +53,8 @@ QUICK_KWARGS = {
 }
 # Suites whose smoke mode is a different entry point, not just kwargs.
 QUICK_SUITES = {"nn_sweep": nn_sweep.run_quick,
-                "convergence": convergence.run_quick}
+                "convergence": convergence.run_quick,
+                "odometry": odometry_drift.run_quick}
 
 
 def main(argv=None) -> None:

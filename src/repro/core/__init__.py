@@ -7,6 +7,8 @@ from repro.core.icp import (ICPParams, ICPResult, icp, icp_batch,
 from repro.core.nn_search import nn_search, pairwise_sq_dists
 from repro.core.nn_search_grid import (GridQueryStats, grid_nn_fn,
                                        neighborhood_stats, nn_search_grid)
+from repro.core.odometry import (FrameDiagnostics, OdometryConfig,
+                                 OdometryPipeline)
 from repro.core.point_to_plane import (point_to_plane_rmse, robust_weights,
                                        solve_point_to_plane)
 from repro.core.pyramid import PyramidEngine, icp_pyramid
@@ -19,6 +21,7 @@ __all__ = [
     "available_engines", "get_engine", "register_engine",
     "icp", "icp_batch", "icp_fixed_iterations", "icp_pyramid",
     "PyramidEngine", "grid_nn_fn", "nn_search_grid",
+    "OdometryPipeline", "OdometryConfig", "FrameDiagnostics",
     "GridQueryStats", "neighborhood_stats",
     "nn_search", "pairwise_sq_dists", "svd3x3", "estimate_rigid_transform",
     "make_transform", "random_rigid_transform", "transform_points",

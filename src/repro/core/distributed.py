@@ -121,7 +121,7 @@ def icp_sharded(mesh: Mesh, source: jax.Array, target: jax.Array,
         return runner(src_rep, None, params, correspond_fn=cfn)
 
     out_specs = ICPResult(T=P(), rmse=P(), iterations=P(), converged=P(),
-                          inlier_frac=P())
+                          inlier_frac=P(), degenerate=P())
     if dst_normals is None:
         fn = shard_map(body, mesh=mesh, in_specs=(P(), P(axes)),
                        out_specs=out_specs, check_vma=False)
@@ -176,7 +176,8 @@ def batched_icp_sharded(mesh: Mesh, src_batch: jax.Array,
         return jax.vmap(one)(src_b, dst_b, sv_b, nrm_b)
 
     out_specs = ICPResult(T=P(f_axes), rmse=P(f_axes), iterations=P(f_axes),
-                          converged=P(f_axes), inlier_frac=P(f_axes))
+                          converged=P(f_axes), inlier_frac=P(f_axes),
+                          degenerate=P(f_axes))
     if dst_normals is None:
         fn = shard_map(body, mesh=mesh,
                        in_specs=(P(f_axes), P(f_axes, t_axes), P(f_axes)),

@@ -148,7 +148,8 @@ class RegistrationEngine:
 
     # -- public API --------------------------------------------------------
     def register(self, source, target, params: ICPParams | None = None,
-                 initial_transform=None, *, bucket: bool = True) -> ICPResult:
+                 initial_transform=None, *, src_valid=None, dst_valid=None,
+                 bucket: bool = True) -> ICPResult:
         """Register one (N,3) source onto one (M,3) target.
 
         With ``bucket=True`` (default) both clouds are padded up to the next
@@ -156,16 +157,30 @@ class RegistrationEngine:
         slightly-varying frame sizes reuses one compilation per bucket
         instead of one per exact size. Padding happens device-side — an
         already-bucket-sized device array passes through with zero copies.
+
+        ``src_valid``/``dst_valid`` let callers who manage their own
+        static-capacity padding (e.g. the rolling submap of
+        ``repro.data.submap``, whose invalid rows already carry the far
+        sentinel) pass masks directly; the clouds then go through at their
+        given shapes, no re-bucketing. ``initial_transform`` is cast to
+        f32 so a float64 warm start cannot poison the f32 trace.
         """
         params = self._default_params(params)
         src = jnp.asarray(source, dtype=jnp.float32)
         dst = jnp.asarray(target, dtype=jnp.float32)
-        sv = dv = None
-        if bucket:
-            n_b, m_b = bucket_size(src.shape[0]), bucket_size(dst.shape[0])
-            if (src.shape[0], dst.shape[0]) != (n_b, m_b):
-                src, sv = _pad_device(src, n_b)
-                dst, dv = _pad_device(dst, m_b)
+        if initial_transform is not None:
+            initial_transform = jnp.asarray(initial_transform, jnp.float32)
+        if src_valid is not None or dst_valid is not None:
+            sv = None if src_valid is None else jnp.asarray(src_valid, bool)
+            dv = None if dst_valid is None else jnp.asarray(dst_valid, bool)
+        else:
+            sv = dv = None
+            if bucket:
+                n_b = bucket_size(src.shape[0])
+                m_b = bucket_size(dst.shape[0])
+                if (src.shape[0], dst.shape[0]) != (n_b, m_b):
+                    src, sv = _pad_device(src, n_b)
+                    dst, dv = _pad_device(dst, m_b)
         fn = self._executable("single", params)
         return fn(src, dst, initial_transform, sv, dv)
 
@@ -177,6 +192,9 @@ class RegistrationEngine:
         single compiled program. Masks come from ``collate_pairs``; every
         ``ICPResult`` leaf gains a leading batch axis."""
         fn = self._executable("batch", self._default_params(params))
+        if initial_transforms is not None:
+            # f32 pin: a float64 warm-start batch must not poison the trace
+            initial_transforms = jnp.asarray(initial_transforms, jnp.float32)
         return fn(jnp.asarray(sources, dtype=jnp.float32),
                   jnp.asarray(targets, dtype=jnp.float32),
                   initial_transforms,

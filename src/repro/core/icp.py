@@ -57,6 +57,7 @@ class ICPState(NamedTuple):
     rmse: jax.Array        # inlier RMSE of the last iteration
     iteration: jax.Array   # int32
     inlier_frac: jax.Array
+    degenerate: jax.Array  # bool: an iteration saw zero gate/robust weight
 
 
 class ICPResult(NamedTuple):
@@ -65,6 +66,13 @@ class ICPResult(NamedTuple):
     iterations: jax.Array
     converged: jax.Array
     inlier_frac: jax.Array
+    degenerate: jax.Array
+
+
+# Total weight below this is "no correspondence evidence at all": the
+# minimiser systems are singular (Kabsch covariance / Gauss-Newton normal
+# matrix of all-zero weights), so the iteration freezes instead of solving.
+_DEGENERATE_WEIGHT_SUM = 1e-6
 
 
 def _icp_iteration(source, state: ICPState, params: ICPParams,
@@ -100,20 +108,33 @@ def _icp_iteration(source, state: ICPState, params: ICPParams,
             residual = jnp.sqrt(jnp.maximum(d2, 0.0))
         weights = weights * robust_weights(residual, params.robust_kernel,
                                            params.robust_scale)
+    # Zero-inlier freeze: when the gate (or robust reweighting) rejects
+    # every correspondence the minimiser systems are singular — the Kabsch
+    # covariance and the Gauss-Newton normal matrix are all zeros, so a
+    # solve would produce an arbitrary (or NaN) step and the cumulative
+    # product would lock it in. Freeze instead: identity delta (the loop
+    # terminates), rmse = +inf (there is no inlier error to report), and a
+    # sticky ``degenerate`` flag so callers can tell this apart from
+    # genuine convergence.
+    degenerate = jnp.sum(weights) <= _DEGENERATE_WEIGHT_SUM
     if plane:
-        T_delta = solve_point_to_plane(src_t, matched, normals, weights)
+        T_step = solve_point_to_plane(src_t, matched, normals, weights)
     else:
-        T_delta = tf.estimate_rigid_transform(src_t, matched, weights)
+        T_step = tf.estimate_rigid_transform(src_t, matched, weights)
+    T_delta = jnp.where(degenerate, jnp.eye(4, dtype=source.dtype), T_step)
     T_new = T_delta @ state.T  # cumulative product, paper eq. (3)
     delta = tf.transform_delta(T_delta)
-    err = tf.rmse(tf.transform_points(T_delta, src_t), matched, weights)
+    err = jnp.where(degenerate, jnp.asarray(jnp.inf, source.dtype),
+                    tf.rmse(tf.transform_points(T_delta, src_t), matched,
+                            weights))
     if src_valid is None:
         inlier_frac = jnp.mean(weights)
     else:
         denom = jnp.maximum(jnp.sum(src_valid.astype(source.dtype)), 1.0)
         inlier_frac = jnp.sum(weights) / denom
     return ICPState(T=T_new, delta=delta, rmse=err,
-                    iteration=state.iteration + 1, inlier_frac=inlier_frac)
+                    iteration=state.iteration + 1, inlier_frac=inlier_frac,
+                    degenerate=jnp.logical_or(state.degenerate, degenerate))
 
 
 def _default_correspond_fn(target: jax.Array, params: ICPParams,
@@ -204,7 +225,8 @@ def icp(source: jax.Array, target: jax.Array | None,
                     delta=jnp.asarray(jnp.inf, source.dtype),
                     rmse=jnp.asarray(jnp.inf, source.dtype),
                     iteration=jnp.asarray(0, jnp.int32),
-                    inlier_frac=jnp.asarray(0.0, source.dtype))
+                    inlier_frac=jnp.asarray(0.0, source.dtype),
+                    degenerate=jnp.asarray(False))
 
     def cond(state: ICPState):
         return jnp.logical_and(state.iteration < params.max_iterations,
@@ -214,9 +236,11 @@ def icp(source: jax.Array, target: jax.Array | None,
         return _icp_iteration(source, state, params, correspond_fn, src_valid)
 
     final = jax.lax.while_loop(cond, body, init)
-    converged = final.delta <= params.transformation_epsilon
+    converged = jnp.logical_and(final.delta <= params.transformation_epsilon,
+                                jnp.logical_not(final.degenerate))
     return ICPResult(T=final.T, rmse=final.rmse, iterations=final.iteration,
-                     converged=converged, inlier_frac=final.inlier_frac)
+                     converged=converged, inlier_frac=final.inlier_frac,
+                     degenerate=final.degenerate)
 
 
 def icp_fixed_iterations(source, target, params: ICPParams = ICPParams(),
@@ -238,7 +262,8 @@ def icp_fixed_iterations(source, target, params: ICPParams = ICPParams(),
                     delta=jnp.asarray(jnp.inf, source.dtype),
                     rmse=jnp.asarray(jnp.inf, source.dtype),
                     iteration=jnp.asarray(0, jnp.int32),
-                    inlier_frac=jnp.asarray(0.0, source.dtype))
+                    inlier_frac=jnp.asarray(0.0, source.dtype),
+                    degenerate=jnp.asarray(False))
 
     def step(state, _):
         # Freeze once converged (weights of the no-op: keep state).
@@ -249,9 +274,11 @@ def icp_fixed_iterations(source, target, params: ICPParams = ICPParams(),
         return state, None
 
     final, _ = jax.lax.scan(step, init, None, length=params.max_iterations)
-    converged = final.delta <= params.transformation_epsilon
+    converged = jnp.logical_and(final.delta <= params.transformation_epsilon,
+                                jnp.logical_not(final.degenerate))
     return ICPResult(T=final.T, rmse=final.rmse, iterations=final.iteration,
-                     converged=converged, inlier_frac=final.inlier_frac)
+                     converged=converged, inlier_frac=final.inlier_frac,
+                     degenerate=final.degenerate)
 
 
 def icp_batch(sources: jax.Array, targets: jax.Array,

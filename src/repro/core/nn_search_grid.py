@@ -23,7 +23,13 @@ Exactness contract (the one the tests pin down):
 
 Queries with an *empty* neighbourhood get ``d2 = +inf`` (gated out of ICP),
 or — with ``exact_fallback=True`` — a brute-force answer computed lazily
-via ``lax.cond`` only when at least one such row exists. The fallback is
+via ``lax.cond`` only when at least one such row exists. Queries *outside*
+the ``dims`` lattice resolve through the same path: their cell coords are
+kept unclipped (``cell_coords(..., clip=False)``), so only lattice cells
+their neighbourhood window genuinely overlaps contribute candidates — a
+query more than ``rings`` cells past the lattice edge reports an empty
+hood (counted by ``GridQueryStats.out_of_lattice``) instead of being
+silently matched against boundary-cell residents. The fallback is
 meant for standalone/query use; inside vmapped ICP both branches of a cond
 execute, so the pyramid engine relies on the gate semantics instead.
 
@@ -52,12 +58,17 @@ class GridQueryStats(NamedTuple):
     an empty neighbourhood (the rows that come back ``d2 = inf``).
     ``dropped_frac``: truncated candidates as a fraction of all candidates
     the neighbourhoods actually hold — how much of the scene the sweep
-    never saw.
+    never saw. ``out_of_lattice``: fraction of queries whose own cell lies
+    outside the ``dims`` lattice entirely — the moving-ego failure mode
+    (ISSUE 5): such rows used to clip into boundary cells and return
+    confidently-wrong neighbours; they now resolve to the empty-hood path
+    and this counter makes the miss observable per frame.
     """
 
     overflow_frac: jax.Array
     empty_frac: jax.Array
     dropped_frac: jax.Array
+    out_of_lattice: jax.Array
 
 
 @functools.lru_cache(maxsize=None)
@@ -86,7 +97,13 @@ def gather_candidates(src: jax.Array, grid: VoxelGrid, max_per_cell: int,
     (useful against ``max_per_cell`` overflow on dense surfaces).
     """
     dims = grid.dims
-    icq = cell_coords(src, grid.origin, grid.voxel_size, dims)   # (N, 3)
+    # clip=False: a query outside the lattice keeps its true out-of-range
+    # cell, so its neighbourhood window only picks up lattice cells it
+    # *geometrically* overlaps (none, once it is > rings cells away). The
+    # old clipped coords teleported far queries into boundary cells and
+    # returned their residents as confident neighbours.
+    icq = cell_coords(src, grid.origin, grid.voxel_size, dims,
+                      clip=False)                                # (N, 3)
     off = jnp.asarray(_neighbor_offsets(rings), jnp.int32)       # (C, 3)
     nbr = icq[:, None, :] + off[None]                            # (N, 27, 3)
     in_bounds = jnp.all(
@@ -119,22 +136,23 @@ def neighborhood_stats(src: jax.Array, grid: VoxelGrid,
     engine exposes it as :meth:`~repro.core.pyramid.PyramidEngine.polish_stats`).
     """
     dims = grid.dims
-    icq = cell_coords(src, grid.origin, grid.voxel_size, dims)
+    dims_arr = jnp.asarray(dims, jnp.int32)
+    icq = cell_coords(src, grid.origin, grid.voxel_size, dims, clip=False)
     off = jnp.asarray(_neighbor_offsets(rings), jnp.int32)
     nbr = icq[:, None, :] + off[None]
-    in_bounds = jnp.all(
-        (nbr >= 0) & (nbr < jnp.asarray(dims, jnp.int32)), axis=-1)
-    cid = linear_cell_ids(jnp.clip(nbr, 0, jnp.asarray(dims, jnp.int32) - 1),
-                          dims)
+    in_bounds = jnp.all((nbr >= 0) & (nbr < dims_arr), axis=-1)
+    cid = linear_cell_ids(jnp.clip(nbr, 0, dims_arr - 1), dims)
     cnt = jnp.where(in_bounds, grid.count[cid], 0)               # (N, C)
     kept = jnp.minimum(cnt, max_per_cell)
     dropped = jnp.sum(cnt - kept, axis=1).astype(jnp.float32)    # (N,)
     total = jnp.sum(cnt, axis=1).astype(jnp.float32)
     n = jnp.asarray(src.shape[0], jnp.float32)
+    in_lattice = jnp.all((icq >= 0) & (icq < dims_arr), axis=-1)
     return GridQueryStats(
         overflow_frac=jnp.sum(jnp.any(cnt > max_per_cell, axis=1)) / n,
         empty_frac=jnp.sum(jnp.sum(kept, axis=1) == 0) / n,
-        dropped_frac=jnp.sum(dropped) / jnp.maximum(jnp.sum(total), 1.0))
+        dropped_frac=jnp.sum(dropped) / jnp.maximum(jnp.sum(total), 1.0),
+        out_of_lattice=jnp.sum(jnp.logical_not(in_lattice)) / n)
 
 
 def nn_search_grid(src: jax.Array, grid: VoxelGrid, *,

@@ -42,12 +42,31 @@ def _rot_z(yaw: float) -> np.ndarray:
     return np.array([[c, -s, 0.0], [s, c, 0.0], [0.0, 0.0, 1.0]])
 
 
-def make_world(seed: int, cfg: SceneConfig = SceneConfig()) -> np.ndarray:
-    """Build a static world point set (float64 internally for pose math)."""
+def make_world(seed: int, cfg: SceneConfig = SceneConfig(),
+               point_seed: int | None = None) -> np.ndarray:
+    """Build a world point set (float64 internally for pose math).
+
+    ``point_seed=None`` (default) reproduces the original static world
+    byte-for-byte: one rng stream draws both the scene *layout* (building
+    placement, pole positions, heights) and the *surface sample points*.
+
+    With ``point_seed`` set, surface points draw from a separate stream
+    while the layout stays pinned by ``seed`` — the same scene, freshly
+    sampled. Real LiDAR never hits the same surface points twice; a
+    static world therefore hands frame-to-frame ICP an unrealistic
+    point-identity correspondence. Odometry streams should draw one
+    ``point_seed`` per frame (:func:`sequence_scans`) so consecutive
+    frames share *surfaces*, not samples.
+    """
     rng = np.random.default_rng(1000 + seed)
+    # prng draws surface samples; aliasing it to rng keeps the legacy
+    # single-stream draw order exactly (baseline scenes are pinned by it).
+    prng = (rng if point_seed is None
+            else np.random.default_rng(2_000_000_000 + point_seed))
     e = cfg.extent
-    # Ground plane with gentle undulation.
-    g_xy = rng.uniform(-2 * e, 2 * e, size=(cfg.n_ground, 2))
+    # Ground plane with gentle undulation (z is a function of x, y, so
+    # resampled grounds lie on the same surface).
+    g_xy = prng.uniform(-2 * e, 2 * e, size=(cfg.n_ground, 2))
     g_z = 0.05 * np.sin(0.08 * g_xy[:, 0]) * np.cos(0.05 * g_xy[:, 1])
     ground = np.column_stack([g_xy, g_z])
     # Building facades: vertical planes along the corridor.
@@ -59,8 +78,8 @@ def make_world(seed: int, cfg: SceneConfig = SceneConfig()) -> np.ndarray:
         cy = rng.uniform(-e, e) + np.sign(rng.standard_normal()) * rng.uniform(8, 20)
         w, h = rng.uniform(8, 25), rng.uniform(4, 12)
         axis = rng.integers(0, 2)
-        u = rng.uniform(-w / 2, w / 2, per)
-        z = rng.uniform(0, h, per)
+        u = prng.uniform(-w / 2, w / 2, per)
+        z = prng.uniform(0, h, per)
         if axis == 0:
             pts = np.column_stack([cx + u, np.full(per, cy), z])
         else:
@@ -74,16 +93,16 @@ def make_world(seed: int, cfg: SceneConfig = SceneConfig()) -> np.ndarray:
     py = rng.uniform(-e, e, n_poles_obj)
     poles = []
     for i in range(n_poles_obj):
-        theta = rng.uniform(0, 2 * np.pi, per_pole)
+        theta = prng.uniform(0, 2 * np.pi, per_pole)
         r = rng.uniform(0.05, 0.25)
-        z = rng.uniform(0, rng.uniform(2, 6), per_pole)
+        z = prng.uniform(0, rng.uniform(2, 6), per_pole)
         poles.append(np.column_stack([px[i] + r * np.cos(theta),
                                       py[i] + r * np.sin(theta), z]))
     poles = np.concatenate(poles, axis=0)
     clutter = np.column_stack([
-        rng.uniform(-2 * e, 2 * e, cfg.n_clutter),
-        rng.uniform(-e, e, cfg.n_clutter),
-        np.abs(rng.normal(0.5, 0.5, cfg.n_clutter)),
+        prng.uniform(-2 * e, 2 * e, cfg.n_clutter),
+        prng.uniform(-e, e, cfg.n_clutter),
+        np.abs(prng.normal(0.5, 0.5, cfg.n_clutter)),
     ])
     return np.concatenate([ground, walls, poles, clutter], axis=0)
 
@@ -102,6 +121,42 @@ def ego_pose(seq: int, frame: int) -> tuple[np.ndarray, np.ndarray]:
     return _rot_z(yaw), np.array([x, y, 0.0])
 
 
+def gt_pose(seq: int):
+    """Frame-0-anchored ground-truth pose lookup for a sequence.
+
+    Returns ``gt(frame) -> (4, 4)``: the pose of ``frame``'s sensor in
+    frame-0 coordinates — the trajectory every odometry driver measures
+    drift against. The frame-0 anchor is computed once; it is
+    loop-invariant across a whole trajectory evaluation.
+    """
+    R0, t0 = ego_pose(seq, 0)
+
+    def gt(frame: int) -> np.ndarray:
+        R1, t1 = ego_pose(seq, frame)
+        T = np.eye(4)
+        T[:3, :3] = R0.T @ R1
+        T[:3, 3] = R0.T @ (t1 - t0)
+        return T
+
+    return gt
+
+
+def sample_consecutive_pairs(scans, samples: int, seed: int = 0):
+    """(sampled_source, full_target) pairs of consecutive stream frames.
+
+    The frame-to-frame protocol's pair construction (§IV-A source
+    sampling), shared by the odometry example and the drift benchmark so
+    they measure the same thing by construction.
+    """
+    rng = np.random.default_rng(seed)
+    pairs = []
+    for f in range(len(scans) - 1):
+        sel = rng.choice(scans[f].shape[0],
+                         min(samples, scans[f].shape[0]), replace=False)
+        pairs.append((scans[f][sel], scans[f + 1]))
+    return pairs
+
+
 def scan_frame(world: np.ndarray, seq: int, frame: int,
                cfg: SceneConfig = SceneConfig(), seed: int = 0) -> np.ndarray:
     """Scan the world from the ego pose at ``frame``: sensor-frame points.
@@ -118,6 +173,27 @@ def scan_frame(world: np.ndarray, seq: int, frame: int,
     return pts.astype(np.float32)
 
 
+def sequence_scans(seq: int, frames: int, cfg: SceneConfig = SceneConfig(),
+                   resample: bool = True, seed: int = 0) -> list[np.ndarray]:
+    """Sensor-frame scan stream for frames ``0..frames-1`` of a sequence.
+
+    ``resample=True`` (the odometry protocol) redraws surface sample
+    points per frame from the pinned scene layout — consecutive frames
+    then share surfaces but not samples, like a real spinning LiDAR.
+    ``resample=False`` scans one static world (the legacy protocol —
+    identical points across frames give pairwise ICP an exact
+    point-identity correspondence no real sensor provides).
+    """
+    if not resample:
+        world = make_world(seq, cfg)
+        return [scan_frame(world, seq, f, cfg, seed) for f in range(frames)]
+    out = []
+    for f in range(frames):
+        world = make_world(seq, cfg, point_seed=seed * 65_537 + f)
+        out.append(scan_frame(world, seq, f, cfg, seed))
+    return out
+
+
 def frame_pair(seq: int, frame: int, cfg: SceneConfig = SceneConfig(),
                n_source_samples: int = 4096, seed: int = 0):
     """(source_sampled, target_full, T_gt): consecutive-frame registration task.
@@ -125,8 +201,20 @@ def frame_pair(seq: int, frame: int, cfg: SceneConfig = SceneConfig(),
     Matches the paper's protocol (§IV-A): 4096 points randomly sampled from
     the source frame; the full target cloud is the NN search space. T_gt maps
     frame ``frame``'s sensor coordinates onto frame ``frame+1``'s.
+
+    Builds the world per call; sequence drivers should build it once and
+    use :func:`frame_pair_from_world`.
     """
     world = make_world(seq, cfg)
+    return frame_pair_from_world(world, seq, frame, cfg, n_source_samples,
+                                 seed)
+
+
+def frame_pair_from_world(world: np.ndarray, seq: int, frame: int,
+                          cfg: SceneConfig = SceneConfig(),
+                          n_source_samples: int = 4096, seed: int = 0):
+    """:func:`frame_pair` against a prebuilt world — identical outputs,
+    amortises the world build over a whole sequence (odometry drivers)."""
     src = scan_frame(world, seq, frame, cfg, seed)
     dst = scan_frame(world, seq, frame + 1, cfg, seed)
     rng = np.random.default_rng(seed * 7 + seq * 31 + frame)

@@ -1,0 +1,139 @@
+"""Rolling local voxel submap for streaming scan-to-map odometry.
+
+Frame-to-frame odometry chains per-pair errors into an unbounded random
+walk; the classic fix (and the regime the paper's KITTI numbers live in)
+is registering each scan against a persistent *local map*. This module is
+that map, built from the repo's own static-shape primitives:
+
+  * **insert** — each registered scan is fused into the map by one
+    ``voxel_downsample`` pass over ``concat(map, scan)``: per occupied
+    voxel the centroid of old map points and new scan points, i.e. the
+    map both *grows* (new cells) and *refines* (revisited cells average
+    across frames, beating single-scan sensor noise). Capacity is static
+    (``SubmapParams.capacity`` rows + validity mask, collate sentinel
+    conventions), so the fuse is one jitted executable for the whole
+    stream.
+  * **eviction** — cells farther than ``evict_radius`` from the current
+    ego position drop out of the fuse, bounding memory to the local
+    neighbourhood exactly like the paper's on-chip target residency
+    bounds the NN search space.
+  * **re-anchoring** — the lattice origin snaps to the voxel grid centred
+    on the current ego position every insert. This is what makes the
+    out-of-lattice fix (``cell_coords(..., clip=False)``) matter at
+    system scale: queries from a moving ego stay *inside* ``dims``, so
+    the grid searcher never has to fall back, while anything the ego
+    outran is reported honestly instead of matched to a boundary cell.
+
+The map lives in map/world frame (frame 0 of the stream); callers
+transform scans by their estimated pose before inserting
+(``repro.core.odometry.OdometryPipeline`` does this per frame).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.collate import PAD_SENTINEL
+from repro.data.voxelize import VoxelGrid, build_voxel_grid, voxel_downsample
+
+
+class SubmapParams(NamedTuple):
+    """Static submap configuration (hashable: jit-cache friendly).
+
+    ``dims * voxel_size`` is the lattice extent in metres — size it to
+    cover the eviction sphere (``2 * evict_radius``) or the in-lattice
+    filter will evict before the distance filter does. ``capacity`` is the
+    static point budget; occupied voxels beyond it are dropped
+    deterministically by ``voxel_downsample`` (watch ``occupancy()``
+    saturate toward 1.0 as the budget fills).
+    """
+
+    voxel_size: float = 0.5
+    capacity: int = 16384
+    dims: tuple[int, int, int] = (192, 192, 48)   # 96 m x 96 m x 24 m
+    evict_radius: float = 45.0
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def _fuse(map_pts, map_valid, new_pts, new_valid, center,
+          params: SubmapParams):
+    """One insert+evict+re-anchor step, fully static-shape.
+
+    Returns (points, valid, origin) at ``params.capacity`` rows.
+    """
+    v = jnp.asarray(params.voxel_size, jnp.float32)
+    dims = jnp.asarray(params.dims, jnp.float32)
+    # Re-anchor: lattice centred on the ego, snapped to the voxel grid so
+    # cell membership is stable across inserts that don't move far.
+    origin = jnp.floor((center - 0.5 * dims * v) / v) * v
+    pts = jnp.concatenate([map_pts, new_pts.astype(jnp.float32)], axis=0)
+    valid = jnp.concatenate([map_valid, new_valid], axis=0)
+    # Evict by distance from the ego (sentinel pad rows are far anyway)…
+    d2 = jnp.sum((pts - center) ** 2, axis=-1)
+    valid = valid & (d2 <= params.evict_radius ** 2)
+    # …and drop anything outside the re-anchored lattice, so every stored
+    # point has honest cell membership (no build-time boundary clipping).
+    ic = jnp.floor((pts - origin) / v)
+    valid = valid & jnp.all((ic >= 0) & (ic < dims), axis=-1)
+    fused, fused_valid = voxel_downsample(pts, v,
+                                          max_points=params.capacity,
+                                          valid=valid, origin=origin)
+    return fused, fused_valid, origin
+
+
+class Submap:
+    """Rolling local map: static-capacity fused cloud + validity mask.
+
+    Host-facing stateful wrapper over the jitted fuse step; one instance
+    per stream. ``points``/``valid`` follow collate conventions (invalid
+    rows carry ``PAD_SENTINEL``), so the map drops straight into the
+    engine layer as a registration target, mask-aware or not.
+    """
+
+    def __init__(self, params: SubmapParams = SubmapParams()):
+        self.params = params
+        cap = int(params.capacity)
+        self.points = jnp.full((cap, 3), PAD_SENTINEL, jnp.float32)
+        self.valid = jnp.zeros((cap,), bool)
+        self.origin = jnp.zeros((3,), jnp.float32)
+        self.frames_inserted = 0
+
+    def insert(self, points, center, valid=None) -> None:
+        """Fuse a (N, 3) map-frame cloud; evict + re-anchor around
+        ``center`` (the current ego position in map frame, (3,))."""
+        pts = jnp.asarray(points, jnp.float32)
+        if valid is None:
+            valid = jnp.ones((pts.shape[0],), bool)
+        else:
+            valid = jnp.asarray(valid, bool)
+        self.points, self.valid, self.origin = _fuse(
+            self.points, self.valid, pts, valid,
+            jnp.asarray(center, jnp.float32), self.params)
+        self.frames_inserted += 1
+
+    # -- registration-target views ----------------------------------------
+    def target(self):
+        """(points, valid) — feed to ``RegistrationEngine.register``."""
+        return self.points, self.valid
+
+    def grid(self) -> VoxelGrid:
+        """Counting-sort grid over the live map (anchored at the rolling
+        origin, so in-radius queries are guaranteed in-lattice)."""
+        return build_voxel_grid(self.points, self.params.voxel_size,
+                                self.params.dims, valid=self.valid,
+                                origin=self.origin)
+
+    # -- diagnostics -------------------------------------------------------
+    @property
+    def size(self) -> int:
+        """Occupied voxels (valid map points)."""
+        return int(jnp.sum(self.valid))
+
+    def occupancy(self) -> float:
+        """Fraction of the static capacity in use (1.0 = budget saturated,
+        inserts are dropping cells — grow ``capacity`` or shrink
+        ``evict_radius``)."""
+        return self.size / int(self.params.capacity)

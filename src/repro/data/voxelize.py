@@ -24,10 +24,16 @@ Static-capacity semantics (everything here is a *bounded* structure):
     for their scene, and the validity mask reports the real occupancy.
   * ``build_voxel_grid`` stores every valid point; capacity truncation
     happens at *query* time (``max_per_cell`` in the searcher), not here.
-  * Points outside the ``dims`` lattice clip into the boundary cells. Their
-    coordinates stay exact (distances computed from them are still right);
-    only their *neighbourhood membership* degrades, so size ``dims`` to the
-    scene and treat out-of-lattice queries as approximate.
+  * *Stored* points outside the ``dims`` lattice clip into the boundary
+    cells (their coordinates stay exact, so distances computed from them
+    are still right; only their neighbourhood membership degrades — size
+    ``dims`` to the scene). *Queries* are different: the grid searcher
+    resolves them with ``cell_coords(..., clip=False)`` so an
+    out-of-lattice query sees an (honest) empty neighbourhood and is
+    reported / brute-falled-back, never silently matched through a
+    boundary cell it does not belong to. The rolling submap
+    (``repro.data.submap``) re-anchors its origin so streaming queries
+    stay inside the lattice in the first place.
 """
 from __future__ import annotations
 
@@ -74,10 +80,22 @@ class VoxelGrid:
 
 
 def cell_coords(points: jax.Array, origin: jax.Array, voxel_size,
-                dims: tuple[int, int, int]) -> jax.Array:
-    """(…,3) points -> (…,3) int32 lattice coords, clipped into ``dims``."""
-    ic = jnp.floor((points - origin) / voxel_size).astype(jnp.int32)
-    return jnp.clip(ic, 0, jnp.asarray(dims, jnp.int32) - 1)
+                dims: tuple[int, int, int], *, clip: bool = True) -> jax.Array:
+    """(…,3) points -> (…,3) int32 lattice coords.
+
+    With ``clip=True`` (the build-time convention) coordinates clip into
+    ``dims``. ``clip=False`` keeps the true (possibly out-of-range) coords
+    so query-side consumers can *detect* out-of-lattice points instead of
+    silently treating them as boundary-cell residents — the searcher bug
+    this distinction fixes (see ``repro.core.nn_search_grid``). The float
+    coordinate is pre-clamped to the int32-safe range so far sentinels
+    (±1e6 pads, 1e15 mask coords) stay finite, ordinary out-of-range ints.
+    """
+    ic_f = jnp.floor((points - origin) / voxel_size)
+    ic = jnp.clip(ic_f, -2.0 ** 30, 2.0 ** 30).astype(jnp.int32)
+    if clip:
+        ic = jnp.clip(ic, 0, jnp.asarray(dims, jnp.int32) - 1)
+    return ic
 
 
 def linear_cell_ids(ic: jax.Array, dims: tuple[int, int, int]) -> jax.Array:

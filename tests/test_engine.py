@@ -229,3 +229,49 @@ def test_register_batch_warm_start():
                              PARAMS._replace(max_iterations=3),
                              initial_transforms=T0)
     np.testing.assert_allclose(np.asarray(res.T), np.asarray(T0), atol=0.02)
+
+
+# -- warm starts through every engine (ISSUE 5) -----------------------------
+
+@pytest.mark.parametrize("engine_kwargs", [
+    dict(engine="xla"),
+    dict(engine="pallas", bn=64, bm=128),
+    dict(engine="distributed"),
+    dict(engine="pyramid", levels=()),
+], ids=lambda kw: kw["engine"])
+def test_register_pairs_warm_start_cuts_iterations(engine_kwargs):
+    """``initial_transforms`` must thread through every engine's
+    ``register_pairs``: a near-perfect warm start cuts the iteration count
+    and reaches the same fixed point as the cold solve. T0 is passed as
+    float64 on purpose — the engine pins it to f32 (a stray f64 warm start
+    must not poison the f32 trace)."""
+    kwargs = dict(engine_kwargs)
+    name = kwargs.pop("engine")
+    pairs = [_pair(k) for k in jax.random.split(jax.random.PRNGKey(11), 2)]
+    eng = get_engine(name, chunk=256, **kwargs)
+    clouds = [(s, d) for s, d, _ in pairs]
+    cold, _ = eng.register_pairs(clouds, PARAMS)
+    T0 = np.stack([T for _, _, T in pairs]).astype(np.float64)
+    warm, _ = eng.register_pairs(clouds, PARAMS, initial_transforms=T0)
+    assert warm.T.dtype == jnp.float32
+    assert (int(np.sum(np.asarray(warm.iterations)))
+            < int(np.sum(np.asarray(cold.iterations))))
+    np.testing.assert_allclose(np.asarray(warm.T), np.asarray(cold.T),
+                               atol=1e-2)
+
+
+def test_register_warm_start_f64_no_retrace():
+    """A float64 ``initial_transform`` must reuse the f32 executable (no
+    retrace, f32 result) and agree with the f32-warm-started solve."""
+    src, dst, T_gt = _pair(jax.random.PRNGKey(12))
+    eng = get_engine("xla", chunk=256)
+    params = PARAMS._replace(max_iterations=13)  # fresh cache entry
+    res32 = eng.register(src, dst, params,
+                         initial_transform=np.asarray(T_gt, np.float32))
+    before = eng.trace_count
+    res64 = eng.register(src, dst, params,
+                         initial_transform=np.asarray(T_gt, np.float64))
+    assert eng.trace_count == before
+    assert res64.T.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(res64.T), np.asarray(res32.T),
+                               atol=1e-6)

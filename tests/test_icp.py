@@ -73,6 +73,56 @@ def test_max_correspondence_distance_rejects_outliers():
     assert float(res.inlier_frac) < 1.0
 
 
+@pytest.mark.parametrize("minimizer", ["point_to_point", "point_to_plane"])
+def test_zero_inlier_disjoint_clouds_freezes(minimizer):
+    """ISSUE 5 regression: when the gate rejects every correspondence the
+    iteration must freeze (no singular Kabsch/Gauss-Newton step) and flag
+    the result degenerate instead of reporting a perfect rmse=0 lock."""
+    src = jax.random.uniform(jax.random.PRNGKey(0), (64, 3),
+                             minval=-1.0, maxval=1.0)
+    dst = src + jnp.asarray([100.0, 0.0, 0.0])  # disjoint: nothing gates in
+    params = ICPParams(max_iterations=10, max_correspondence_distance=1.0,
+                       chunk=32, minimizer=minimizer)
+    res = icp(src, dst, params)
+    assert bool(res.degenerate)
+    assert not bool(res.converged)
+    assert float(res.inlier_frac) == 0.0
+    assert np.isinf(float(res.rmse))          # not a fake-perfect 0.0
+    assert np.all(np.isfinite(np.asarray(res.T)))
+    np.testing.assert_allclose(np.asarray(res.T), np.eye(4), atol=1e-6)
+
+
+def test_zero_inlier_gate_below_spacing_keeps_warm_start():
+    """Gate smaller than the point spacing: zero inliers even on overlapping
+    clouds. The cumulative transform must stay at the initial transform
+    (frozen), not step to garbage, and the scan/batch variants must agree."""
+    g = jnp.arange(5.0)
+    lattice = jnp.stack(jnp.meshgrid(g, g, g), axis=-1).reshape(-1, 3)
+    src = lattice + jnp.asarray([0.4, 0.3, 0.2])  # >= 0.29 from any node
+    T0 = random_rigid_transform(jax.random.PRNGKey(1), max_angle=0.2,
+                                max_translation=0.5)
+    params = ICPParams(max_iterations=8, max_correspondence_distance=0.05,
+                       chunk=64)
+    res = icp(src, lattice, params, initial_transform=T0)
+    assert bool(res.degenerate) and not bool(res.converged)
+    np.testing.assert_allclose(np.asarray(res.T), np.asarray(T0), atol=1e-6)
+    fixed = icp_fixed_iterations(src, lattice, params, initial_transform=T0)
+    assert bool(fixed.degenerate)
+    np.testing.assert_allclose(np.asarray(fixed.T), np.asarray(T0), atol=1e-6)
+    from repro.core import icp_batch
+    batch = icp_batch(src[None], lattice[None], params,
+                      initial_transforms=np.asarray(T0)[None])
+    assert bool(batch.degenerate[0])
+    assert batch.degenerate.shape == (1,)
+
+
+def test_degenerate_flag_false_on_healthy_registration():
+    src, target, _ = _perturbed_cloud(jax.random.PRNGKey(4))
+    res = icp(src, target, ICPParams(max_iterations=30, chunk=256))
+    assert not bool(res.degenerate)
+    assert bool(res.converged)
+
+
 def test_pcl_api_surface():
     key = jax.random.PRNGKey(8)
     src, target, T_gt = _perturbed_cloud(key)
@@ -123,3 +173,36 @@ def test_icp_with_pallas_engine():
     T_x = xla.align()
     T_p = pal.align()
     np.testing.assert_allclose(T_p, T_x, atol=1e-3)
+
+
+# -- warm starts (ISSUE 5) --------------------------------------------------
+
+def test_warm_start_cuts_iterations_to_same_fixed_point():
+    """A good ``initial_transform`` must reduce the iteration count AND
+    land on the same fixed point as the cold solve — a warm start changes
+    where the descent begins, never where it ends."""
+    src, target, T_gt = _perturbed_cloud(jax.random.PRNGKey(9))
+    params = ICPParams(max_iterations=30, chunk=256)
+    cold = icp(src, target, params)
+    warm = icp(src, target, params, initial_transform=T_gt)
+    assert bool(warm.converged)
+    assert int(warm.iterations) < int(cold.iterations)
+    np.testing.assert_allclose(np.asarray(warm.T), np.asarray(cold.T),
+                               atol=5e-3)
+
+
+def test_icp_batch_warm_start_cuts_iterations():
+    """Per-lane ``initial_transforms`` through the batched (scan/freeze)
+    path: fewer iterations, same fixed points as the cold batch."""
+    from repro.core import icp_batch
+    trios = [_perturbed_cloud(k)
+             for k in jax.random.split(jax.random.PRNGKey(10), 3)]
+    src_b = jnp.stack([s for s, _, _ in trios])
+    dst_b = jnp.stack([t for _, t, _ in trios])
+    T0 = jnp.stack([T for _, _, T in trios])
+    params = ICPParams(max_iterations=30, chunk=256)
+    cold = icp_batch(src_b, dst_b, params)
+    warm = icp_batch(src_b, dst_b, params, initial_transforms=T0)
+    assert int(jnp.sum(warm.iterations)) < int(jnp.sum(cold.iterations))
+    np.testing.assert_allclose(np.asarray(warm.T), np.asarray(cold.T),
+                               atol=5e-3)

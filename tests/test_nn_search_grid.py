@@ -194,6 +194,47 @@ def test_overflow_stats_pinned():
     assert float(relaxed.dropped_frac) == 0.0
 
 
+def test_out_of_lattice_queries_reported_never_boundary_matched():
+    """ISSUE 5 regression: queries translated past the grid extent used to
+    clip into boundary cells and return confidently-wrong neighbours; they
+    must resolve to the d2=inf path and be counted in the stats."""
+    src, dst = _clouds(11, n=64, m=1200)
+    grid = build_voxel_grid(dst, VOXEL, DIMS)
+    # Translate the whole query cloud far past the lattice (dims*voxel =
+    # 32 m wide, anchored at the cloud): a moving ego that outran the map.
+    far = src + jnp.asarray([200.0, 0.0, 0.0])
+    d2, idx, stats = nn_search_grid(far, grid, max_per_cell=64,
+                                    with_stats=True)
+    assert bool(jnp.all(jnp.isinf(d2)))        # reported miss, not a match
+    assert float(stats.out_of_lattice) == 1.0
+    assert float(stats.empty_frac) == 1.0
+    # The brute fallback rescues exactly these rows with true neighbours.
+    d2_fb, idx_fb = nn_search_grid(far, grid, max_per_cell=64,
+                                   exact_fallback=True, dst=dst, chunk=256)[:2]
+    d2_ref, idx_ref = nn_search(far, dst, chunk=256)
+    np.testing.assert_allclose(np.asarray(d2_fb), np.asarray(d2_ref),
+                               rtol=1e-4, atol=1e-2)
+    # In-lattice queries on the same grid still report zero out-of-lattice.
+    stats_in = nn_search_grid(src, grid, max_per_cell=64,
+                              with_stats=True)[-1]
+    assert float(stats_in.out_of_lattice) == 0.0
+
+
+def test_just_outside_lattice_still_sees_boundary_cells():
+    """A query within ``rings`` cells of the lattice edge genuinely overlaps
+    boundary cells — it must still find its true boundary neighbour (the
+    fix only removes *fictitious* overlap, not real overlap)."""
+    dst = jnp.asarray([[0.5, 0.5, 0.5], [7.5, 7.5, 7.5]], jnp.float32)
+    grid = build_voxel_grid(dst, 2.0, (4, 4, 4), origin=jnp.zeros(3))
+    # 0.4 m past the lattice edge along x: cell (4, 3, 3) — out of lattice,
+    # but its 27-hood overlaps the boundary cell holding dst[1].
+    q = jnp.asarray([[8.4, 7.5, 7.5]], jnp.float32)
+    d2, idx, stats = nn_search_grid(q, grid, max_per_cell=8, with_stats=True)
+    assert int(idx[0]) == 1
+    np.testing.assert_allclose(float(d2[0]), 0.9 ** 2, rtol=1e-5)
+    assert float(stats.out_of_lattice) == 1.0  # counted, yet still served
+
+
 def test_pyramid_polish_stats_surface():
     from repro.core.pyramid import PyramidEngine
 

@@ -1,0 +1,77 @@
+"""Rolling submap: fuse/refine, distance eviction, origin re-anchoring."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.nn_search_grid import neighborhood_stats, nn_search_grid
+from repro.data.collate import PAD_SENTINEL
+from repro.data.submap import Submap, SubmapParams
+
+PARAMS = SubmapParams(voxel_size=0.5, capacity=4096, dims=(64, 64, 40),
+                      evict_radius=14.0)
+
+
+def _cloud(seed=0, n=2000, half=5.0):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(-half, half, (n, 3)).astype(np.float32)
+
+
+def test_insert_populates_and_pads_with_sentinel():
+    sm = Submap(PARAMS)
+    assert sm.size == 0 and sm.occupancy() == 0.0
+    sm.insert(_cloud(), np.zeros(3))
+    assert 0 < sm.size <= PARAMS.capacity
+    pts, valid = sm.target()
+    dead = np.asarray(pts)[~np.asarray(valid)]
+    assert np.all(dead == PAD_SENTINEL)          # collate convention
+    live = np.asarray(pts)[np.asarray(valid)]
+    assert np.all(np.abs(live) < 6.0)
+
+
+def test_refusing_same_scan_does_not_grow():
+    """Revisited cells refine (centroid average), they don't duplicate."""
+    sm = Submap(PARAMS)
+    c = _cloud(1)
+    sm.insert(c, np.zeros(3))
+    s0 = sm.size
+    sm.insert(c, np.zeros(3))
+    assert sm.size == s0
+    assert sm.frames_inserted == 2
+
+
+def test_eviction_by_distance_from_ego():
+    sm = Submap(PARAMS)
+    sm.insert(_cloud(2), np.zeros(3))
+    # Ego jumps 30 m: the old neighbourhood is > evict_radius away.
+    far = _cloud(3) + np.asarray([30.0, 0.0, 0.0], np.float32)
+    sm.insert(far, np.asarray([30.0, 0.0, 0.0], np.float32))
+    live = np.asarray(sm.points)[np.asarray(sm.valid)]
+    assert live.shape[0] > 0
+    assert live[:, 0].min() > 20.0               # old cells are gone
+    d = np.linalg.norm(live - np.asarray([30.0, 0.0, 0.0]), axis=1)
+    assert d.max() <= PARAMS.evict_radius + 1e-4
+
+
+def test_reanchoring_keeps_moving_ego_queries_in_lattice():
+    """The system-scale point of the out-of-lattice fix: after re-anchoring,
+    queries at the current ego position always resolve in-lattice."""
+    sm = Submap(PARAMS)
+    for step in range(4):
+        center = np.asarray([10.0 * step, 0.0, 0.0], np.float32)
+        sm.insert(_cloud(step, half=4.0) + center, center)
+        q = jnp.asarray(_cloud(step + 50, n=200, half=4.0) + center)
+        stats = neighborhood_stats(q, sm.grid(), max_per_cell=32)
+        assert float(stats.out_of_lattice) == 0.0
+        d2, _ = nn_search_grid(q, sm.grid(), max_per_cell=32)
+        assert float(jnp.mean(jnp.isfinite(d2))) > 0.95
+    # and the origin actually moved with the ego
+    assert float(sm.origin[0]) > 0.0
+
+
+def test_capacity_saturation_is_graceful():
+    tiny = PARAMS._replace(capacity=256)
+    sm = Submap(tiny)
+    sm.insert(_cloud(4, n=4000), np.zeros(3))
+    assert sm.size <= 256
+    assert sm.occupancy() <= 1.0
+    pts, valid = sm.target()
+    assert pts.shape == (256, 3) and valid.shape == (256,)
