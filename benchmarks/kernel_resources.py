@@ -42,6 +42,23 @@ def run():
     rows.append(("table2/arithmetic_intensity", 0.0,
                  f"{ai:.0f} flop/byte vs v5e ridge "
                  f"{V5E['peak_flops_bf16'] / V5E['hbm_bw']:.0f}"))
+    # Fused ICP-iteration kernel (DESIGN.md §11): VMEM footprint of the
+    # tuned config and the FLOP/byte win over the separate-op chain — the
+    # "why fusion is fast" numbers, not just the timings.
+    from repro.kernels.fused_icp import (DEFAULT_CONFIG, fused_cost_model,
+                                         fused_vmem_bytes)
+    cfg = DEFAULT_CONFIG
+    for plane, tag in ((False, "p2p"), (True, "p2plane")):
+        fb = fused_vmem_bytes(cfg.bn, cfg.bc, plane=plane, prune=cfg.prune)
+        rows.append((f"table2/fused_{tag}_vmem_double_buffered", 0.0,
+                     f"{fb['total_double_buffered']} B "
+                     f"({fb['total_double_buffered'] / VMEM_V5E * 100:.2f}% "
+                     f"of VMEM; bn={cfg.bn},bc={cfg.bc})"))
+    cost = fused_cost_model(4096, 27 * 32)  # 27-cell hood, max_per_cell=32
+    rows.append(("table2/fused_flop_per_byte", 0.0,
+                 f"{cost['fused']['flop_per_byte']:.2f} fused vs "
+                 f"{cost['chain']['flop_per_byte']:.2f} chain "
+                 f"(hbm_ratio={cost['hbm_ratio']:.2f}x)"))
     # functional check at paper scale (1 source point vs 130k candidates,
     # interpret mode on CPU — correctness, not speed)
     key = jax.random.PRNGKey(0)

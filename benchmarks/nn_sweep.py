@@ -81,9 +81,11 @@ def _sweep_case(src, dst, *, max_per_cell, grid_dims, gate=1.0,
 
 
 def _icp_parity(src, dst, params):
-    """Pyramid engine vs brute xla engine: final-transform agreement."""
+    """Pyramid / fused-pallas engines vs brute xla engine: final-transform
+    agreement (the ISSUE-2 and ISSUE-6 acceptance contracts)."""
     eb = get_engine("xla")
     ep = get_engine("pyramid")
+    ef = get_engine("pallas")
     t0 = time.perf_counter()
     rb = eb.register(src, dst, params)
     jax.block_until_ready(rb.T)
@@ -92,14 +94,22 @@ def _icp_parity(src, dst, params):
     rp = ep.register(src, dst, params)
     jax.block_until_ready(rp.T)
     t_p = time.perf_counter() - t0
-    Tb, Tp = np.asarray(rb.T), np.asarray(rp.T)
+    t0 = time.perf_counter()
+    rf = ef.register(src, dst, params._replace(fused=True))
+    jax.block_until_ready(rf.T)
+    t_f = time.perf_counter() - t0
+    Tb, Tp, Tf = np.asarray(rb.T), np.asarray(rp.T), np.asarray(rf.T)
     return {
         "rot_err": float(np.linalg.norm(Tp[:3, :3] - Tb[:3, :3])),
         "trans_err": float(np.linalg.norm(Tp[:3, 3] - Tb[:3, 3])),
+        "fused_rot_err": float(np.linalg.norm(Tf[:3, :3] - Tb[:3, :3])),
+        "fused_trans_err": float(np.linalg.norm(Tf[:3, 3] - Tb[:3, 3])),
         "t_brute_icp_s": t_b,      # includes compile on first call
         "t_pyramid_icp_s": t_p,
+        "t_fused_icp_s": t_f,
         "rmse_brute": float(rb.rmse),
         "rmse_pyramid": float(rp.rmse),
+        "rmse_fused": float(rf.rmse),
     }
 
 
@@ -114,10 +124,16 @@ def run(sizes=FULL_SIZES, samples: int = 4096, max_per_cell: int = 32,
     rng = np.random.default_rng(0)
     rows = []
     report = {"sweeps": [], "parity": None}
+    from benchmarks.registration_latency import fused_iteration_case
     for m in sizes:
         dst = dst_full[rng.choice(dst_full.shape[0], m, replace=False)]
         case, d2_b = _sweep_case(src, dst, max_per_cell=max_per_cell,
                                  grid_dims=grid_dims)
+        # Fused single-pass iteration vs the unfused per-iteration chains
+        # (ISSUE-6): same src/dst, resident structures prebuilt.
+        fused_rows, fused_case = fused_iteration_case(src, dst)
+        case.update({k: v for k, v in fused_case.items()
+                     if k not in ("m", "n")})
         report["sweeps"].append(case)
         rows.append((f"nn_sweep/m{m}_brute", case["t_brute_s"] * 1e6,
                      f"M={m};exact"))
@@ -126,6 +142,10 @@ def run(sizes=FULL_SIZES, samples: int = 4096, max_per_cell: int = 32,
                      f"agree_gated={case['agree_gated']:.4f}"))
         rows.append((f"nn_sweep/m{m}_grid_build", case["t_grid_build_s"] * 1e6,
                      "once-per-frame"))
+        rows.append((f"nn_sweep/m{m}_fused_iter",
+                     case["t_iter_fused_s"] * 1e6,
+                     f"speedup_vs_pallas={case['fused_iter_speedup']:.1f}x;"
+                     f"vs_grid_chain={case['fused_vs_grid_chain']:.2f}x"))
         if mitigation and m == max(sizes):
             # Overflow mitigation at the densest M: same 1 m exact radius
             # via rings=2 over half-size cells -> ~4x lower cell occupancy
@@ -150,6 +170,10 @@ def run(sizes=FULL_SIZES, samples: int = 4096, max_per_cell: int = 32,
                      f"{par['rot_err']:.2e} (<=1e-3 target)"))
         rows.append(("nn_sweep/icp_parity_trans", 0.0,
                      f"{par['trans_err']:.2e} (<=1e-3 target)"))
+        rows.append(("nn_sweep/icp_parity_fused_rot", 0.0,
+                     f"{par['fused_rot_err']:.2e} (<=1e-3 target)"))
+        rows.append(("nn_sweep/icp_parity_fused_trans", 0.0,
+                     f"{par['fused_trans_err']:.2e} (<=1e-3 target)"))
     with open(out_json, "w") as f:
         json.dump(report, f, indent=2)
     return rows

@@ -89,6 +89,85 @@ def stage_breakdown(src, dst, params: ICPParams, grid_dims=(128, 128, 32)):
     return rows
 
 
+def fused_iteration_case(src, dst, params: ICPParams | None = None,
+                         grid_dims=(128, 128, 32)):
+    """Fused single-pass iteration vs the unfused per-iteration chains.
+
+    Three timed bodies, all at frame scope (resident target structures are
+    prebuilt, exactly as the engines amortise them):
+
+      * ``unfused_pallas`` — the pallas engine's iteration: resident brute
+        kernel sweep + winner gather + gate weights + Kabsch (the ISSUE-6
+        acceptance comparator, O(N·M) candidate volume).
+      * ``unfused_grid``   — the separate-op grid chain: grid candidate
+        sweep kernel + winner gather + weights + Kabsch (same candidate
+        volume as fused, but four HBM round-trips).
+      * ``fused``          — one ``fused_icp`` pass + the O(1) moment solve.
+
+    Returns (rows, case_dict); the case dict feeds BENCH_nn.json and the
+    bench-guard ratio metric.
+    """
+    from repro.core.transform import estimate_from_moments
+    from repro.kernels.fused_icp import make_fused_fn
+    from repro.kernels.nn_search_grid import grid_kernel_nn_fn
+    from repro.kernels.ops import resident_nn_fn
+
+    params = ICPParams() if params is None else params
+    srcj = jnp.asarray(src, jnp.float32)
+    dstj = jnp.asarray(dst, jnp.float32)
+    gate2 = params.max_correspondence_distance ** 2
+
+    nn_brute = resident_nn_fn(dstj)
+
+    def unfused_pallas_iter(s):
+        d2, idx = nn_brute(s)
+        matched = jnp.take(dstj, idx, axis=0)
+        w = (d2 <= gate2).astype(jnp.float32)
+        return estimate_rigid_transform(s, matched, w)
+
+    t_pallas = timeit(jax.jit(unfused_pallas_iter), srcj)
+
+    voxel = max(1.0, params.max_correspondence_distance)
+    grid = jax.jit(lambda d: build_voxel_grid(d, voxel, grid_dims))(dstj)
+    jax.block_until_ready(grid.points)
+    nn_grid = grid_kernel_nn_fn(grid)
+
+    def unfused_grid_iter(s):
+        d2, idx, matched = nn_grid(s)
+        w = (d2 <= gate2).astype(jnp.float32)
+        return estimate_rigid_transform(s, matched, w)
+
+    t_grid = timeit(jax.jit(unfused_grid_iter), srcj)
+
+    fused_fn = make_fused_fn(grid, params)
+
+    def fused_iter(s):
+        m = fused_fn(s)
+        return estimate_from_moments(m.sw, m.sp, m.sq, m.spq)
+
+    t_fused = timeit(jax.jit(fused_iter), srcj)
+
+    m = int(dst.shape[0])
+    case = {
+        "m": m, "n": int(src.shape[0]),
+        "t_iter_unfused_pallas_s": t_pallas,
+        "t_iter_unfused_grid_s": t_grid,
+        "t_iter_fused_s": t_fused,
+        "fused_iter_speedup": t_pallas / t_fused,      # vs the pallas engine
+        "fused_vs_grid_chain": t_grid / t_fused,       # vs the fused-size chain
+    }
+    rows = [
+        (f"table4/iter_unfused_pallas_m{m}", t_pallas * 1e6,
+         "resident brute kernel + gather + Kabsch"),
+        (f"table4/iter_unfused_grid_m{m}", t_grid * 1e6,
+         "grid sweep kernel + gather + Kabsch"),
+        (f"table4/iter_fused_m{m}", t_fused * 1e6,
+         f"speedup_vs_pallas={case['fused_iter_speedup']:.1f}x;"
+         f"vs_grid_chain={case['fused_vs_grid_chain']:.2f}x"),
+    ]
+    return rows, case
+
+
 def run(n_seqs: int = 5, samples: int = 2048, iters: int = 50, scene=None):
     rows = []
     speedups = []
@@ -114,6 +193,8 @@ def run(n_seqs: int = 5, samples: int = 2048, iters: int = 50, scene=None):
     # Where an iteration's time goes (first frame is representative).
     src0, dst0, _ = frames[0]
     rows.extend(stage_breakdown(src0, dst0, params))
+    fused_rows, _ = fused_iteration_case(src0, dst0, params)
+    rows.extend(fused_rows)
     return rows
 
 

@@ -55,8 +55,33 @@ def markdown(dir_: pathlib.Path = RESULTS, mesh: str = "single") -> str:
     return "\n".join(lines)
 
 
+def fused_rows(n: int = 4096, ck: int = 27 * 32):
+    """Static roofline of the fused ICP iteration vs the separate-op chain
+    (DESIGN.md §11): v5e dominant-term time from the kernel cost model —
+    the same kind of MODEL row as the projected Table IV column.
+    """
+    from repro.kernels.fused_icp import fused_cost_model
+    from repro.roofline.report import V5E
+    rows = []
+    for plane, tag in ((False, "p2p"), (True, "p2plane")):
+        cost = fused_cost_model(n, ck, plane=plane)
+        for kind in ("fused", "chain"):
+            c = cost[kind]
+            compute_s = c["flops"] / V5E["peak_flops_bf16"]
+            memory_s = c["hbm_bytes"] / V5E["hbm_bw"]
+            dominant = "compute" if compute_s >= memory_s else "memory"
+            rows.append((f"roofline/fused_icp_{tag}_{kind}_v5e_projected",
+                         max(compute_s, memory_s) * 1e6,
+                         f"dominant={dominant};"
+                         f"intensity={c['flop_per_byte']:.2f}fl/B"))
+        rows.append((f"roofline/fused_icp_{tag}_hbm_ratio", 0.0,
+                     f"{cost['hbm_ratio']:.2f}x less HBM traffic fused"))
+    return rows
+
+
 def run():
-    """Bench-CSV rows: one per completed cell (single-pod mesh)."""
+    """Bench-CSV rows: one per completed cell (single-pod mesh), plus the
+    static fused-iteration roofline."""
     rows = []
     for stem, rec in load(RESULTS).items():
         if rec.get("status") != "ok" or not stem.endswith("__single"):
@@ -64,6 +89,7 @@ def run():
         r = rec["roofline"]
         rows.append((f"roofline/{stem}", r["step_time_s"] * 1e6,
                      f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f}"))
+    rows.extend(fused_rows())
     return rows
 
 

@@ -10,6 +10,7 @@ from repro.core.nn_search_grid import (GridQueryStats, grid_nn_fn,
 from repro.core.odometry import (FrameDiagnostics, OdometryConfig,
                                  OdometryPipeline)
 from repro.core.point_to_plane import (point_to_plane_rmse, robust_weights,
+                                       solve_normal_equations,
                                        solve_point_to_plane)
 from repro.core.pyramid import PyramidEngine, icp_pyramid
 from repro.core.svd3x3 import svd3x3
@@ -25,5 +26,6 @@ __all__ = [
     "GridQueryStats", "neighborhood_stats",
     "nn_search", "pairwise_sq_dists", "svd3x3", "estimate_rigid_transform",
     "make_transform", "random_rigid_transform", "transform_points",
-    "point_to_plane_rmse", "robust_weights", "solve_point_to_plane",
+    "point_to_plane_rmse", "robust_weights", "solve_normal_equations",
+    "solve_point_to_plane",
 ]

@@ -231,20 +231,50 @@ class PallasEngine(RegistrationEngine):
     The target augmentation is built once per frame at trace scope via
     ``kernels.ops.resident_nn_fn`` — each ICP iteration only augments the
     small source cloud and runs the MXU kernel against the resident target.
+
+    ``params.fused`` swaps the whole iteration body for the single-pass
+    moment kernel (``repro.kernels.fused_icp``, DESIGN.md §11): a resident
+    counting-sort grid replaces the augmented target, and search + gate +
+    IRLS weight + moment accumulation run as one Pallas pass per
+    iteration; the unfused path above stays the fallback. The fused tile
+    config defaults to the autotuned ``DEFAULT_CONFIG`` — override with
+    the ``fused_*`` constructor kwargs.
     """
 
     name = "pallas"
 
     def __init__(self, chunk: int = 2048, bn: int = 512, bm: int = 1024,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 grid_dims: tuple[int, int, int] = (128, 128, 32),
+                 grid_voxel: float | None = None, max_per_cell: int = 32,
+                 rings: int = 1, fused_bn: int | None = None,
+                 fused_bc: int | None = None,
+                 fused_prune: bool | None = None):
         super().__init__(chunk)
         self._bn, self._bm = bn, bm
         self._interpret = interpret  # None: auto (interpret unless on TPU)
+        self._grid_dims = tuple(grid_dims)
+        self._grid_voxel = grid_voxel
+        self._max_per_cell = max_per_cell
+        self._rings = rings
+        self._fused_bn, self._fused_bc = fused_bn, fused_bc
+        self._fused_prune = fused_prune
 
     def _interp(self) -> bool:
-        if self._interpret is None:
-            return jax.default_backend() != "tpu"
-        return self._interpret
+        from repro.kernels.common import default_interpret
+        return default_interpret(self._interpret)
+
+    def _fused_kwargs(self) -> dict:
+        return dict(grid_dims=self._grid_dims, grid_voxel=self._grid_voxel,
+                    max_per_cell=self._max_per_cell, rings=self._rings,
+                    bn=self._fused_bn, bc=self._fused_bc,
+                    prune=self._fused_prune, interpret=self._interpret)
+
+    def _make_fused_fn(self, dst, params: ICPParams, dv, normals):
+        from repro.kernels.fused_icp import default_fused_fn
+        return default_fused_fn(dst, params, dst_valid=dv,
+                                target_normals=normals,
+                                **self._fused_kwargs())
 
     def _build_single(self, params: ICPParams):
         from repro.kernels.ops import resident_nn_fn
@@ -253,6 +283,10 @@ class PallasEngine(RegistrationEngine):
         def run(src, dst, T0, sv, dv):
             self._note_trace("single", params, src.shape, dst.shape)
             normals = _target_normals(dst, params, dv)
+            if params.fused:
+                fused_fn = self._make_fused_fn(dst, params, dv, normals)
+                return icp(src, dst, params, T0, fused_fn=fused_fn,
+                           src_valid=sv, target_normals=normals)
             dst = _mask_invalid(dst, dv)
             nn_fn = resident_nn_fn(dst, bn=self._bn, bm=self._bm,
                                    interpret=interpret)
@@ -273,6 +307,12 @@ class PallasEngine(RegistrationEngine):
 
             def one(src, dst, T0_, sv_, dv_):
                 normals = _target_normals(dst, params, dv_)
+                if params.fused:
+                    fused_fn = self._make_fused_fn(dst, params, dv_, normals)
+                    return icp_fixed_iterations(src, dst, params, T0_,
+                                                fused_fn=fused_fn,
+                                                src_valid=sv_,
+                                                target_normals=normals)
                 dst = _mask_invalid(dst, dv_)
                 nn_fn = resident_nn_fn(dst, bn=self._bn, bm=self._bm,
                                        interpret=interpret)

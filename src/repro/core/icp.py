@@ -35,7 +35,8 @@ import jax.numpy as jnp
 
 from repro.core import transform as tf
 from repro.core.nn_search import nn_search
-from repro.core.point_to_plane import robust_weights, solve_point_to_plane
+from repro.core.point_to_plane import (robust_weights, solve_normal_equations,
+                                       solve_point_to_plane)
 
 MINIMIZERS = ("point_to_point", "point_to_plane")
 
@@ -49,6 +50,7 @@ class ICPParams(NamedTuple):
     minimizer: str = "point_to_point"  # | "point_to_plane" (DESIGN.md §9)
     robust_kernel: str = "none"        # | "huber" | "tukey"
     robust_scale: float = 0.5          # huber delta / tukey cutoff, metres
+    fused: bool = False  # single-pass Pallas iteration (DESIGN.md §11)
 
 
 class ICPState(NamedTuple):
@@ -137,6 +139,61 @@ def _icp_iteration(source, state: ICPState, params: ICPParams,
                     degenerate=jnp.logical_or(state.degenerate, degenerate))
 
 
+def _fused_icp_iteration(source, state: ICPState, params: ICPParams,
+                         fused_fn: Callable,
+                         src_valid: jax.Array | None = None):
+    """One ICP iteration through the fused Pallas moment kernel
+    (``repro.kernels.fused_icp``, DESIGN.md §11).
+
+    ``fused_fn(src_t, src_valid)`` runs correspondence search, gating,
+    IRLS weighting and moment accumulation as a single device pass and
+    returns the Σ-moments (:class:`PointMoments` / :class:`PlaneMoments`);
+    this host epilogue only does the O(1) solve and bookkeeping. The
+    semantics mirror :func:`_icp_iteration` exactly: same weights, same
+    degenerate freeze, same post-step rmse against the *pre-step*
+    correspondences (computed algebraically via ``rmse_from_moments``).
+    """
+    src_t = tf.transform_points(state.T, source)
+    m = fused_fn(src_t, src_valid)
+    degenerate = m.sw <= _DEGENERATE_WEIGHT_SUM
+    if params.minimizer == "point_to_plane":
+        T_step = solve_normal_equations(m.A, m.b).astype(source.dtype)
+    else:
+        T_step = tf.estimate_from_moments(m.sw, m.sp, m.sq,
+                                          m.spq).astype(source.dtype)
+    T_delta = jnp.where(degenerate, jnp.eye(4, dtype=source.dtype), T_step)
+    T_new = T_delta @ state.T
+    delta = tf.transform_delta(T_delta)
+    err = jnp.where(degenerate, jnp.asarray(jnp.inf, source.dtype),
+                    tf.rmse_from_moments(T_delta, m.sw, m.sp, m.sq, m.spq,
+                                         m.spp, m.sqq).astype(source.dtype))
+    if src_valid is None:
+        denom = jnp.asarray(source.shape[0], source.dtype)
+    else:
+        denom = jnp.maximum(jnp.sum(src_valid.astype(source.dtype)), 1.0)
+    inlier_frac = (m.sw / denom).astype(source.dtype)
+    return ICPState(T=T_new, delta=delta, rmse=err,
+                    iteration=state.iteration + 1, inlier_frac=inlier_frac,
+                    degenerate=jnp.logical_or(state.degenerate, degenerate))
+
+
+def _resolve_fused_fn(target, params: ICPParams, fused_fn,
+                      dst_valid, target_normals):
+    """Default fused iteration when ``params.fused`` is set without an
+    explicit ``fused_fn``: resident counting-sort grid over the target
+    (+ trace-scope normals for the plane minimiser)."""
+    if fused_fn is not None:
+        return fused_fn
+    if target is None:
+        raise ValueError("params.fused needs a target cloud (or an explicit "
+                         "fused_fn) to build the resident grid from")
+    if params.minimizer == "point_to_plane" and target_normals is None:
+        target_normals = _auto_target_normals(target, dst_valid)
+    from repro.kernels.fused_icp import default_fused_fn
+    return default_fused_fn(target, params, dst_valid=dst_valid,
+                            target_normals=target_normals)
+
+
 def _default_correspond_fn(target: jax.Array, params: ICPParams,
                            nn_fn: Callable | None,
                            dst_valid: jax.Array | None = None,
@@ -198,7 +255,8 @@ def icp(source: jax.Array, target: jax.Array | None,
         correspond_fn: Callable | None = None,
         src_valid: jax.Array | None = None,
         dst_valid: jax.Array | None = None,
-        target_normals: jax.Array | None = None) -> ICPResult:
+        target_normals: jax.Array | None = None,
+        fused_fn: Callable | None = None) -> ICPResult:
     """Run ICP aligning ``source`` (N,3) onto ``target`` (M,3).
 
     ``nn_fn`` lets callers swap the correspondence engine: the local XLA
@@ -211,9 +269,19 @@ def icp(source: jax.Array, target: jax.Array | None,
     ``target_normals`` (M,3) feeds the point-to-plane minimiser; when the
     plane minimiser is selected without them they are estimated from the
     target once at trace scope (``repro.data.normals`` defaults).
+
+    With ``params.fused`` the whole iteration body runs through the fused
+    Pallas moment kernel instead (``repro.kernels.fused_icp``):
+    ``fused_fn(src_t, src_valid) -> moments`` replaces the correspondence
+    stage entirely (``nn_fn``/``correspond_fn`` are then unused); when no
+    ``fused_fn`` is supplied a resident-grid default is built from
+    ``target`` at trace scope.
     """
     _check_minimizer(params)
-    if correspond_fn is None:
+    if params.fused:
+        fused_fn = _resolve_fused_fn(target, params, fused_fn, dst_valid,
+                                     target_normals)
+    elif correspond_fn is None:
         if params.minimizer == "point_to_plane" and target_normals is None:
             target_normals = _auto_target_normals(target, dst_valid)
         correspond_fn = _default_correspond_fn(target, params, nn_fn,
@@ -233,6 +301,9 @@ def icp(source: jax.Array, target: jax.Array | None,
                                state.delta > params.transformation_epsilon)
 
     def body(state: ICPState):
+        if params.fused:
+            return _fused_icp_iteration(source, state, params, fused_fn,
+                                        src_valid)
         return _icp_iteration(source, state, params, correspond_fn, src_valid)
 
     final = jax.lax.while_loop(cond, body, init)
@@ -246,12 +317,16 @@ def icp(source: jax.Array, target: jax.Array | None,
 def icp_fixed_iterations(source, target, params: ICPParams = ICPParams(),
                          initial_transform=None, nn_fn=None,
                          correspond_fn=None, src_valid=None,
-                         dst_valid=None, target_normals=None) -> ICPResult:
+                         dst_valid=None, target_normals=None,
+                         fused_fn=None) -> ICPResult:
     """Unrolled-depth variant via lax.scan — fixed cost, used for the dry-run
     and roofline (while_loop trip counts are data-dependent; scan gives the
     compiler a static schedule, mirroring the paper's fixed 50-iteration cap)."""
     _check_minimizer(params)
-    if correspond_fn is None:
+    if params.fused:
+        fused_fn = _resolve_fused_fn(target, params, fused_fn, dst_valid,
+                                     target_normals)
+    elif correspond_fn is None:
         if params.minimizer == "point_to_plane" and target_normals is None:
             target_normals = _auto_target_normals(target, dst_valid)
         correspond_fn = _default_correspond_fn(target, params, nn_fn,
@@ -268,7 +343,12 @@ def icp_fixed_iterations(source, target, params: ICPParams = ICPParams(),
     def step(state, _):
         # Freeze once converged (weights of the no-op: keep state).
         active = state.delta > params.transformation_epsilon
-        new = _icp_iteration(source, state, params, correspond_fn, src_valid)
+        if params.fused:
+            new = _fused_icp_iteration(source, state, params, fused_fn,
+                                       src_valid)
+        else:
+            new = _icp_iteration(source, state, params, correspond_fn,
+                                 src_valid)
         state = jax.tree_util.tree_map(
             lambda a, b: jnp.where(active, b, a), state, new)
         return state, None

@@ -68,6 +68,27 @@ def robust_weights(residual: jax.Array, kind: str,
         f"unknown robust kernel {kind!r}; expected one of {ROBUST_KERNELS}")
 
 
+def solve_normal_equations(A: jax.Array, b: jax.Array,
+                           damping: float = 1e-6) -> jax.Array:
+    """Damped 6x6 Gauss-Newton solve + exact exponentiation — the shared
+    epilogue of the XLA path (:func:`solve_point_to_plane`) and the fused
+    kernel's pre-accumulated ``(A, b)`` moments (DESIGN.md §11).
+
+    ``A = Σ w a aᵀ`` and ``b = −Σ w r a`` with ``a = [p×n; n]``; the
+    damping is Levenberg-style, scaled by mean(diag(A)) so it is
+    unit-consistent across the rotation and translation blocks. Returns
+    the (4,4) incremental rigid transform (fp32).
+    """
+    A = A.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    lam = damping * jnp.maximum(jnp.trace(A) / 6.0, 1e-12)
+    x = jnp.linalg.solve(A + lam * jnp.eye(6, dtype=A.dtype), b)
+    omega, t = x[:3], x[3:]
+    angle = jnp.linalg.norm(omega)
+    R = tf.rotation_from_axis_angle(omega, angle)
+    return tf.make_transform(R, t)
+
+
 def solve_point_to_plane(src: jax.Array, dst: jax.Array,
                          normals: jax.Array,
                          weights: jax.Array | None = None,
@@ -99,12 +120,7 @@ def solve_point_to_plane(src: jax.Array, dst: jax.Array,
     aw = a * w[:, None]
     A = aw.T @ a                                            # (6, 6) MXU
     b = -(aw.T @ r)                                         # (6,)
-    lam = damping * jnp.maximum(jnp.trace(A) / 6.0, 1e-12)
-    x = jnp.linalg.solve(A + lam * jnp.eye(6, dtype=A.dtype), b)
-    omega, t = x[:3], x[3:]
-    angle = jnp.linalg.norm(omega)
-    R = tf.rotation_from_axis_angle(omega, angle)
-    return tf.make_transform(R, t).astype(src.dtype)
+    return solve_normal_equations(A, b, damping).astype(src.dtype)
 
 
 def point_to_plane_rmse(src: jax.Array, dst: jax.Array, normals: jax.Array,

@@ -102,11 +102,13 @@ def icp_pyramid(source: jax.Array, target: jax.Array,
         # centroids don't lie on the surfaces they summarise, so plane
         # residuals (and fine-scale robust scales) are meaningless there —
         # the coarse job is a cheap basin capture, the polish does quality.
+        # (fused=False too: the tiny downsampled clouds would waste the
+        # fused kernel's grid build; only the full-resolution polish fuses.)
         p_l = params._replace(
             max_iterations=iters,
             max_correspondence_distance=max(
                 params.max_correspondence_distance, 1.5 * voxel),
-            minimizer="point_to_point", robust_kernel="none")
+            minimizer="point_to_point", robust_kernel="none", fused=False)
         res = icp_fixed_iterations(src_l, dst_l, p_l, initial_transform=T,
                                    src_valid=sv_l, dst_valid=dv_l)
         T = res.T
@@ -114,7 +116,9 @@ def icp_pyramid(source: jax.Array, target: jax.Array,
     gv = (float(grid_voxel) if grid_voxel is not None
           else max(1.0, params.max_correspondence_distance))
     grid = build_voxel_grid(target, gv, grid_dims, valid=dst_valid)
-    if use_kernel:
+    if params.fused:
+        nn_fn = None  # the fused kernel replaces the whole polish stage
+    elif use_kernel:
         from repro.kernels.nn_search_grid import grid_kernel_nn_fn
         nn_fn = grid_kernel_nn_fn(grid, max_per_cell=max_per_cell,
                                   rings=rings, interpret=interpret)
@@ -133,13 +137,24 @@ def icp_pyramid(source: jax.Array, target: jax.Array,
     else:
         normals = None
 
+    runner = icp_fixed_iterations if fixed else icp
+    if params.fused:
+        # Fused polish: the resident grid (and the normals, for the plane
+        # minimiser) feed the single-pass moment kernel directly — same
+        # exactness contract as the grid searcher it replaces.
+        from repro.kernels.fused_icp import make_fused_fn
+        fused_fn = make_fused_fn(grid, params, normals,
+                                 max_per_cell=max_per_cell, rings=rings,
+                                 interpret=interpret)
+        return runner(source, None, params, initial_transform=T,
+                      fused_fn=fused_fn, src_valid=src_valid)
+
     def correspond(src_t):
         d2, idx, matched = nn_fn(src_t)
         if normals is None:
             return d2, matched
         return d2, matched, jnp.take(normals, idx, axis=0)
 
-    runner = icp_fixed_iterations if fixed else icp
     return runner(source, None, params, initial_transform=T,
                   correspond_fn=correspond, src_valid=src_valid)
 

@@ -106,6 +106,25 @@ def estimate_from_covariance(H: jax.Array, src_mean: jax.Array,
     return make_transform(R, t)
 
 
+def estimate_from_moments(sw: jax.Array, sp: jax.Array, sq: jax.Array,
+                          spq: jax.Array) -> jax.Array:
+    """Weighted Kabsch from *raw* (uncentred) moment sums — the fused
+    kernel's epilogue (DESIGN.md §11).
+
+    With sw = Σw, sp = Σw·p, sq = Σw·q and spq = Σw·p⊗q, the centred
+    cross-covariance is ``H = spq − sp⊗sq / sw`` and the centroids are
+    ``sp/sw``, ``sq/sw`` — after which this is exactly
+    :func:`estimate_from_covariance`. The subtraction happens on O(1)
+    scalars, so the only accumulation error is the kernel's fp32 plane
+    sums (same magnitude as the unfused (3,N)@(N,3) matmul).
+    """
+    wsum = jnp.maximum(sw, 1e-12)
+    p_mean = sp / wsum
+    q_mean = sq / wsum
+    H = spq - jnp.outer(sp, sq) / wsum
+    return estimate_from_covariance(H, p_mean, q_mean)
+
+
 def transform_delta(T: jax.Array) -> jax.Array:
     """Scalar 'how far from identity' metric used for the convergence check.
 
@@ -125,3 +144,26 @@ def rmse(src: jax.Array, dst: jax.Array, weights: jax.Array | None = None) -> ja
         return jnp.sqrt(jnp.mean(d2))
     w = weights.astype(src.dtype)
     return jnp.sqrt(jnp.sum(d2 * w) / jnp.maximum(jnp.sum(w), 1e-12))
+
+
+def rmse_from_moments(T_delta: jax.Array, sw: jax.Array, sp: jax.Array,
+                      sq: jax.Array, spq: jax.Array, spp: jax.Array,
+                      sqq: jax.Array) -> jax.Array:
+    """Post-step weighted RMSE from the fused kernel's moment sums.
+
+    Expands Σw‖Rp + t − q‖² algebraically so the per-point residual never
+    has to be materialised:
+
+        Σw‖Rp+t−q‖² = spp + sqq + sw‖t‖² + 2 t·(R sp) − 2 tr(R spq)
+                      − 2 t·sq
+
+    (using Σw qᵀRp = tr(R · spq) with spq[i,j] = Σw p_i q_j). Matches
+    :func:`rmse` of the transformed pairs to fp32 accumulation tolerance.
+    """
+    R = T_delta[:3, :3].astype(jnp.float32)
+    t = T_delta[:3, 3].astype(jnp.float32)
+    total = (spp + sqq + sw * jnp.dot(t, t)
+             + 2.0 * jnp.dot(t, R @ sp)
+             - 2.0 * jnp.trace(R @ spq)
+             - 2.0 * jnp.dot(t, sq))
+    return jnp.sqrt(jnp.maximum(total, 0.0) / jnp.maximum(sw, 1e-12))

@@ -1,0 +1,52 @@
+"""Shared Pallas plumbing: interpret-mode resolution + compiler params.
+
+Every kernel wrapper in ``repro.kernels`` takes an ``interpret`` knob with
+the same tri-state meaning:
+
+  * ``None`` (auto) — run compiled on TPU, interpret everywhere else, so
+    the full kernel suite *executes* (instead of skipping) on CPU-only CI
+    while TPU hosts get the real Mosaic lowering with zero configuration;
+  * ``True`` / ``False`` — force one mode (tests pin ``True``; autotuning
+    on hardware pins ``False``).
+
+Before this module each kernel hand-rolled the same try/except block for
+the TPU ``dimension_semantics`` compiler params and its own interpret
+default; :func:`pallas_call_kwargs` is now the single place both live.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def round_up(x: int, mult: int) -> int:
+    return x + (-x) % mult
+
+
+def default_interpret(interpret: bool | None = None) -> bool:
+    """Resolve the tri-state ``interpret`` flag (see module docstring)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def pallas_call_kwargs(interpret: bool | None,
+                       dimension_semantics: tuple[str, ...]) -> dict:
+    """``pl.pallas_call`` kwargs: resolved interpret + TPU compiler params.
+
+    ``dimension_semantics`` labels each grid axis "parallel" or
+    "arbitrary" (axes carrying a running min / accumulator must be
+    "arbitrary" so Mosaic keeps them sequential). The knob is TPU-only and
+    silently skipped on other compiled backends.
+    """
+    resolved = default_interpret(interpret)
+    kwargs: dict = {"interpret": resolved}
+    if not resolved:
+        try:  # TPU-only knob; harmless to skip elsewhere.
+            from jax.experimental.pallas import tpu as pltpu
+            params_cls = getattr(pltpu, "CompilerParams", None) or getattr(
+                pltpu, "TPUCompilerParams")
+            kwargs["compiler_params"] = params_cls(
+                dimension_semantics=dimension_semantics)
+        except Exception:  # pragma: no cover - non-TPU backends
+            pass
+    return kwargs

@@ -41,6 +41,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import pallas_call_kwargs
+
 AUG_ROWS = 8
 
 
@@ -69,7 +71,7 @@ def _nn_kernel(src_ref, dst_ref, best_d2_ref, best_idx_ref, *, bm: int):
 
 def nn_search_kernel(src_aug: jax.Array, dst_aug: jax.Array,
                      *, bn: int = 512, bm: int = 1024,
-                     interpret: bool = False):
+                     interpret: bool | None = None):
     """Run the NN kernel on pre-augmented operands.
 
     Args:
@@ -79,6 +81,8 @@ def nn_search_kernel(src_aug: jax.Array, dst_aug: jax.Array,
         src 8*512*4 = 16 KiB, dst 8*1024*4 = 32 KiB, scores 512*1024*4 = 2 MiB
         — comfortably double-bufferable in ~128 MiB v5e VMEM while keeping
         the MXU dims (bn, bm) at 128-multiples.
+      interpret: tri-state (``kernels.common``): None = auto (compiled on
+        TPU, interpreter elsewhere).
     Returns:
       (best_d2, best_idx): (N,) fp32 (unclamped) and (N,) int32.
     """
@@ -100,24 +104,13 @@ def nn_search_kernel(src_aug: jax.Array, dst_aug: jax.Array,
         pl.BlockSpec((bn,), lambda i, j: (i,)),
         pl.BlockSpec((bn,), lambda i, j: (i,)),
     )
-    compiler_params = None
-    if not interpret:
-        try:  # TPU-only knob; harmless to skip elsewhere.
-            from jax.experimental.pallas import tpu as pltpu
-            params_cls = getattr(pltpu, "CompilerParams", None) or getattr(
-                pltpu, "TPUCompilerParams")
-            compiler_params = params_cls(
-                dimension_semantics=("parallel", "arbitrary"))
-        except Exception:  # pragma: no cover - non-TPU backends
-            compiler_params = None
     call = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
-        interpret=interpret,
-        **({"compiler_params": compiler_params} if compiler_params else {}),
+        **pallas_call_kwargs(interpret, ("parallel", "arbitrary")),
     )
     return call(src_aug, dst_aug)
 

@@ -34,7 +34,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.nn_search_grid import _MASK_COORD, gather_candidates
 from repro.data.voxelize import VoxelGrid
-from repro.kernels.ops import _round_up
+from repro.kernels.common import pallas_call_kwargs, round_up as _round_up
 
 
 def _grid_nn_kernel(qx_ref, qy_ref, qz_ref, cx_ref, cy_ref, cz_ref,
@@ -62,7 +62,7 @@ def _grid_nn_kernel(qx_ref, qy_ref, qz_ref, cx_ref, cy_ref, cz_ref,
 
 def candidate_sweep_kernel(q: jax.Array, cand: jax.Array, *,
                            bn: int = 512, bc: int = 256,
-                           interpret: bool = False):
+                           interpret: bool | None = None):
     """Masked rowwise argmin over per-query candidate sets.
 
     Args:
@@ -86,24 +86,13 @@ def candidate_sweep_kernel(q: jax.Array, cand: jax.Array, *,
     cspec = pl.BlockSpec((bn, bc), lambda i, j: (i, j))
     out_specs = (pl.BlockSpec((bn,), lambda i, j: (i,)),
                  pl.BlockSpec((bn,), lambda i, j: (i,)))
-    compiler_params = None
-    if not interpret:
-        try:  # TPU-only knob; harmless to skip elsewhere.
-            from jax.experimental.pallas import tpu as pltpu
-            params_cls = getattr(pltpu, "CompilerParams", None) or getattr(
-                pltpu, "TPUCompilerParams")
-            compiler_params = params_cls(
-                dimension_semantics=("parallel", "arbitrary"))
-        except Exception:  # pragma: no cover - non-TPU backends
-            compiler_params = None
     call = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[qspec, qspec, qspec, cspec, cspec, cspec],
         out_specs=out_specs,
         out_shape=out_shape,
-        interpret=interpret,
-        **({"compiler_params": compiler_params} if compiler_params else {}),
+        **pallas_call_kwargs(interpret, ("parallel", "arbitrary")),
     )
     return call(qx, qy, qz, cx, cy, cz)
 
@@ -111,7 +100,7 @@ def candidate_sweep_kernel(q: jax.Array, cand: jax.Array, *,
 def nn_search_grid_pallas(src: jax.Array, grid: VoxelGrid, *,
                           max_per_cell: int = 32, rings: int = 1,
                           bn: int = 512, bc: int = 256,
-                          interpret: bool = False,
+                          interpret: bool | None = None,
                           return_points: bool = False):
     """Grid NN with the candidate sweep run as a Pallas kernel.
 
@@ -151,7 +140,7 @@ def nn_search_grid_pallas(src: jax.Array, grid: VoxelGrid, *,
 
 def grid_kernel_nn_fn(grid: VoxelGrid, *, max_per_cell: int = 32,
                       rings: int = 1, bn: int = 512, bc: int = 256,
-                      interpret: bool = False):
+                      interpret: bool | None = None):
     """Resident-grid Pallas searcher with the ``core.icp`` nn_fn contract
     (the voxel grid, like the augmented target, lives at trace scope)."""
 

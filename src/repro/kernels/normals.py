@@ -37,7 +37,7 @@ from repro.core.nn_search_grid import _MASK_COORD, gather_candidates
 from repro.data.normals import (NormalParams, moments_to_normals,
                                 orient_normals)
 from repro.data.voxelize import VoxelGrid, build_voxel_grid
-from repro.kernels.ops import _round_up
+from repro.kernels.common import pallas_call_kwargs, round_up as _round_up
 
 # Output order of the moment planes: count, Σdx, Σdy, Σdz, then the six
 # unique entries of the symmetric second-moment matrix.
@@ -67,7 +67,7 @@ def _moment_sweep_kernel(qx_ref, qy_ref, qz_ref, cx_ref, cy_ref, cz_ref,
 
 def moment_sweep_kernel(q: jax.Array, cand: jax.Array, radius: float, *,
                         bn: int = 256, bc: int = 128,
-                        interpret: bool = False):
+                        interpret: bool | None = None):
     """Radius-gated moment sums over per-query candidate sets.
 
     Args:
@@ -94,24 +94,13 @@ def moment_sweep_kernel(q: jax.Array, cand: jax.Array, radius: float, *,
     cspec = pl.BlockSpec((bn, bc), lambda i, j: (i, j))
     out_specs = tuple(pl.BlockSpec((bn,), lambda i, j: (i,))
                       for _ in _MOMENTS)
-    compiler_params = None
-    if not interpret:
-        try:  # TPU-only knob; harmless to skip elsewhere.
-            from jax.experimental.pallas import tpu as pltpu
-            params_cls = getattr(pltpu, "CompilerParams", None) or getattr(
-                pltpu, "TPUCompilerParams")
-            compiler_params = params_cls(
-                dimension_semantics=("parallel", "arbitrary"))
-        except Exception:  # pragma: no cover - non-TPU backends
-            compiler_params = None
     call = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[qspec, qspec, qspec, cspec, cspec, cspec],
         out_specs=out_specs,
         out_shape=out_shape,
-        interpret=interpret,
-        **({"compiler_params": compiler_params} if compiler_params else {}),
+        **pallas_call_kwargs(interpret, ("parallel", "arbitrary")),
     )
     cnt, sx, sy, sz, sxx, syy, szz, sxy, sxz, syz = call(qx, qy, qz,
                                                          cx, cy, cz)
@@ -131,7 +120,7 @@ def estimate_normals_pallas(points: jax.Array,
                             viewpoint: jax.Array | None = None,
                             grid: VoxelGrid | None = None,
                             bn: int = 256, bc: int = 128,
-                            interpret: bool = False):
+                            interpret: bool | None = None):
     """Radius-mode normal estimation with the moment sweep as a kernel.
 
     Same contract as ``repro.data.normals.estimate_normals`` with

@@ -13,18 +13,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.common import round_up as _round_up
 from repro.kernels.nn_search import nn_search_kernel
-
-
-def _round_up(x: int, mult: int) -> int:
-    return x + (-x) % mult
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "bm", "interpret"))
 def nn_search_pallas(src: jax.Array, dst: jax.Array,
                      T: jax.Array | None = None,
                      *, bn: int = 512, bm: int = 1024,
-                     interpret: bool = False):
+                     interpret: bool | None = None):
     """NN of each (optionally T-transformed) src point in dst via the kernel.
 
     src: (N,3), dst: (M,3); returns ((N,) fp32 d2, (N,) int32 idx).
@@ -42,7 +39,7 @@ def nn_search_pallas(src: jax.Array, dst: jax.Array,
 
 
 def resident_nn_fn(dst: jax.Array, *, bn: int = 512, bm: int = 1024,
-                   interpret: bool = False):
+                   interpret: bool | None = None):
     """In-trace resident-target searcher for use *inside* a jitted program.
 
     Builds the (8, M') augmented target once at trace position — outside the
@@ -70,7 +67,7 @@ def resident_nn_fn(dst: jax.Array, *, bn: int = 512, bm: int = 1024,
 
 
 def make_frame_engine(dst: jax.Array, *, bn: int = 512, bm: int = 1024,
-                      interpret: bool = False):
+                      interpret: bool | None = None):
     """Pre-augment a target frame once; return nn_fn(src, T) for ICP loops.
 
     This is the intended production shape: the (8, M) augmented target is

@@ -83,6 +83,9 @@ def main(argv=None):
                     choices=["pairwise", "scan_to_map"],
                     help="pairwise: batched frame-pair protocol (§IV-A); "
                          "scan_to_map: streaming odometry pipeline")
+    ap.add_argument("--fused", action="store_true",
+                    help="single-pass fused iteration kernel "
+                         "(ICPParams.fused, DESIGN.md §11)")
     ap.add_argument("--per-frame", action="store_true",
                     help="loop FppsICP.align() per frame instead of one batch")
     ap.add_argument("--reduced", action="store_true",
@@ -103,7 +106,7 @@ def main(argv=None):
     params = ICPParams(max_iterations=50, max_correspondence_distance=1.0,
                        transformation_epsilon=1e-5,
                        minimizer=args.minimizer, robust_kernel=robust,
-                       robust_scale=robust_scale)
+                       robust_scale=robust_scale, fused=args.fused)
 
     if args.mode == "scan_to_map":
         return run_scan_to_map(args, cfg, params)

@@ -33,8 +33,7 @@ def vq_encode(latents: jax.Array, codebook: jax.Array, *, chunk: int = 2048,
     flat = latents.reshape(-1, latents.shape[-1])
     if use_pallas and latents.shape[-1] == 3:
         from repro.kernels.ops import nn_search_pallas
-        interpret = jax.default_backend() != "tpu"
-        d2, idx = nn_search_pallas(flat, codebook, None, interpret=interpret)
+        d2, idx = nn_search_pallas(flat, codebook, None, interpret=None)
     else:
         d2, idx = _nn_anyd(flat, codebook, chunk)
     quant = jnp.take(codebook, idx, axis=0).reshape(latents.shape)

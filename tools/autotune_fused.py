@@ -1,0 +1,140 @@
+"""Autotune the fused ICP-iteration kernel (DESIGN.md §11).
+
+Sweeps the fused kernel's tiling space — query block ``bn``, candidate
+block ``bc``, and the bf16 coarse-distance prune — times one full fused
+iteration (moment sweep + O(1) host solve) per config on a synthetic
+frame at registration scale, and records the winner:
+
+    PYTHONPATH=src python tools/autotune_fused.py [--m 16384] [--apply]
+
+Writes ``BENCH_fused_autotune.json`` at the repo root (committed next to
+the other BENCH baselines). The chosen config is baked into
+``FusedConfig`` defaults in ``repro.kernels.fused_icp`` — re-run with
+``--apply`` after kernel changes or on new hardware and update the
+defaults if the winner moved. The JSON records the backend the sweep ran
+on; interpret-mode (CPU) timings rank dispatch cost, not TPU tile
+efficiency, so only a TPU run should change the committed defaults.
+
+Every config is also parity-checked against the slowest-common
+denominator config (transform diff must stay ≤ 1e-3), so a tiling bug
+can never win the sweep.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+sys.path.insert(0, str(REPO_ROOT))  # benchmarks.common lives at repo root
+
+BN_CANDIDATES = (128, 256, 512)
+BC_CANDIDATES = (128, 256)
+PRUNE_CANDIDATES = (False, True)
+
+
+def sweep(m: int = 16_384, samples: int = 4096, seed_frame: int = 5,
+          out_json: str | None = None):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import timeit
+    from repro.core import ICPParams
+    from repro.core.transform import estimate_from_moments
+    from repro.data.pointcloud import SceneConfig, frame_pair
+    from repro.data.voxelize import build_voxel_grid
+    from repro.kernels.fused_icp import DEFAULT_CONFIG, make_fused_fn
+
+    scene = SceneConfig(n_ground=40_000, n_walls=30_000, n_poles=8_000,
+                        n_clutter=9_000, extent=40.0, sensor_range=45.0)
+    src, dst_full, _ = frame_pair(0, seed_frame, scene, samples)
+    rng = np.random.default_rng(0)
+    dst = dst_full[rng.choice(dst_full.shape[0], min(m, dst_full.shape[0]),
+                              replace=False)]
+    srcj = jnp.asarray(src, jnp.float32)
+    dstj = jnp.asarray(dst, jnp.float32)
+
+    params = ICPParams()
+    voxel = max(1.0, params.max_correspondence_distance)
+    grid = jax.jit(
+        lambda d: build_voxel_grid(d, voxel, (128, 128, 32)))(dstj)
+    jax.block_until_ready(grid.points)
+
+    def iter_fn(bn, bc, prune):
+        fused = make_fused_fn(grid, params, bn=bn, bc=bc, prune=prune)
+
+        def step(s):
+            mo = fused(s)
+            return estimate_from_moments(mo.sw, mo.sp, mo.sq, mo.spq)
+
+        return jax.jit(step)
+
+    T_ref = np.asarray(iter_fn(BN_CANDIDATES[0], BC_CANDIDATES[0],
+                               False)(srcj))
+    configs = []
+    for bn, bc, prune in itertools.product(BN_CANDIDATES, BC_CANDIDATES,
+                                           PRUNE_CANDIDATES):
+        step = iter_fn(bn, bc, prune)
+        T = np.asarray(step(srcj))
+        diff = float(np.abs(T - T_ref).max())
+        t = timeit(step, srcj, warmup=1, iters=3)
+        ok = diff <= 1e-3
+        configs.append({"bn": bn, "bc": bc, "prune": prune,
+                        "t_iter_s": t, "transform_diff": diff,
+                        "parity_ok": ok})
+        print(f"bn={bn:4d} bc={bc:4d} prune={int(prune)} "
+              f"t={t * 1e3:8.2f} ms diff={diff:.2e}"
+              f"{'' if ok else '  PARITY FAIL'}")
+
+    valid = [c for c in configs if c["parity_ok"]]
+    if not valid:
+        raise RuntimeError("autotune: every config failed parity")
+    best = min(valid, key=lambda c: c["t_iter_s"])
+    report = {
+        "backend": jax.default_backend(),
+        "n": int(srcj.shape[0]), "m": int(dstj.shape[0]),
+        "gate": params.max_correspondence_distance,
+        "configs": configs,
+        "best": {k: best[k] for k in ("bn", "bc", "prune", "t_iter_s")},
+        "default": {"bn": DEFAULT_CONFIG.bn, "bc": DEFAULT_CONFIG.bc,
+                    "prune": DEFAULT_CONFIG.prune},
+    }
+    report["default_is_best"] = (
+        best["bn"] == DEFAULT_CONFIG.bn and best["bc"] == DEFAULT_CONFIG.bc
+        and best["prune"] == DEFAULT_CONFIG.prune)
+    if out_json:
+        pathlib.Path(out_json).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"\nbest: bn={best['bn']} bc={best['bc']} "
+          f"prune={best['prune']} ({best['t_iter_s'] * 1e3:.2f} ms) "
+          f"on backend={report['backend']}"
+          + ("" if report["default_is_best"]
+             else " — differs from FusedConfig defaults"))
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=16_384,
+                    help="target cloud size (default 16384)")
+    ap.add_argument("--samples", type=int, default=4096,
+                    help="query cloud size (default 4096)")
+    ap.add_argument("--out", default=str(REPO_ROOT /
+                                         "BENCH_fused_autotune.json"))
+    ap.add_argument("--apply", action="store_true",
+                    help="exit 1 if the winner differs from the committed "
+                         "FusedConfig defaults (reminder to update them)")
+    args = ap.parse_args(argv)
+    report = sweep(m=args.m, samples=args.samples, out_json=args.out)
+    if args.apply and not report["default_is_best"]:
+        print("autotune: update FusedConfig defaults in "
+              "src/repro/kernels/fused_icp.py", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
