@@ -1,8 +1,9 @@
 # FPPS reproduction — tier-1 verify + bench smoke in one command.
 #
 #   make check       fast suite (slow-marked tests excluded) + bench smoke
-#   make test        fast test suite (default dev loop)
-#   make test-all    full tier-1 suite, including slow subprocess tests
+#   make test        fast test suite (default dev loop; slow/chaos excluded)
+#   make test-chaos  fault-injection chaos streams (marker: chaos)
+#   make test-all    full tier-1 suite, including slow + chaos tests
 #   make lint        ruff (pyproject [tool.ruff]); stdlib fallback offline
 #   make bench       full benchmark harness (writes BENCH_*.json)
 #   make bench-smoke every benchmark entry point in smoke mode
@@ -13,12 +14,15 @@
 
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test test-all lint bench bench-smoke bench-guard
+.PHONY: check test test-chaos test-all lint bench bench-smoke bench-guard
 
 check: lint test bench-smoke
 
 test:
-	python -m pytest -q -m "not slow"
+	python -m pytest -q -m "not slow and not chaos"
+
+test-chaos:
+	python -m pytest -q -m chaos
 
 test-all:
 	python -m pytest -q

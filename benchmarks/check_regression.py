@@ -5,7 +5,8 @@ the committed baselines, fail loudly on a >20% regression.
     make bench-guard
 
 Baselines are the committed ``BENCH_nn.json`` / ``BENCH_throughput.json``
-/ ``BENCH_odometry.json`` at the repo root. The guard re-measures in quick
+/ ``BENCH_odometry.json`` / ``BENCH_robustness.json`` at the repo
+root. The guard re-measures in quick
 mode (small scenes, so it finishes in CI minutes) and compares only
 metrics that are *comparable* across the two configurations:
 
@@ -40,6 +41,7 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 NN_BASELINE = REPO_ROOT / "BENCH_nn.json"
 THROUGHPUT_BASELINE = REPO_ROOT / "BENCH_throughput.json"
 ODOMETRY_BASELINE = REPO_ROOT / "BENCH_odometry.json"
+ROBUSTNESS_BASELINE = REPO_ROOT / "BENCH_robustness.json"
 DEFAULT_TOLERANCE = 0.20
 # Median-of-N for timed ratio metrics (see module docstring). Absolute /
 # correctness metrics stay single-shot — they are deterministic, repeats
@@ -197,11 +199,43 @@ def check_odometry(guard: Guard) -> None:
                 baseline["runtime_weighted_speedup"], tolerance=0.4)
 
 
+def check_robustness(guard: Guard) -> None:
+    from benchmarks import robustness
+
+    baseline = json.loads(ROBUSTNESS_BASELINE.read_text())
+    # One full re-run of the committed config (it is already CI-sized;
+    # see benchmarks.robustness). Everything guarded here is
+    # deterministic at fixed seeds — drifts, improvement ratios and tier
+    # histograms are exact replays, not timings — so no TIMED_REPEATS.
+    robustness.run(
+        seq=baseline["seq"], frames=baseline["frames"],
+        burst=tuple(baseline["burst"]), seed=baseline["seed"],
+        out_json=str(REPO_ROOT / "BENCH_robustness_guard.json"))
+    current = json.loads(
+        (REPO_ROOT / "BENCH_robustness_guard.json").read_text())
+    # The cascade may not tax clean streams: same absolute drift bound as
+    # the odometry guard.
+    guard.absolute("robustness/clean_drift",
+                   current["clean"]["final_drift_m"], 0.5)
+    # The headline contract: at least as many fault families must keep
+    # their >=2x cascade advantage as the committed baseline shows.
+    guard.ratio("robustness/families_2x",
+                float(current["families_2x"]), float(baseline["families_2x"]),
+                tolerance=0.0)
+    # Per winning family, the drift-improvement factor may not collapse.
+    for name, fam in baseline["per_family"].items():
+        if fam["meets_2x"]:
+            guard.ratio(f"robustness/{name}_drift_x",
+                        current["per_family"][name]["drift_improvement"],
+                        fam["drift_improvement"])
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
                     help="allowed fractional regression (default 0.20)")
-    ap.add_argument("--only", choices=["nn", "throughput", "odometry"],
+    ap.add_argument("--only",
+                    choices=["nn", "throughput", "odometry", "robustness"],
                     default=None)
     args = ap.parse_args(argv)
     guard = Guard(args.tolerance)
@@ -211,6 +245,8 @@ def main(argv=None) -> int:
         check_throughput(guard)
     if args.only in (None, "odometry"):
         check_odometry(guard)
+    if args.only in (None, "robustness"):
+        check_robustness(guard)
     ok = guard.report()
     if not ok:
         print(f"\nbench-guard: regression beyond "

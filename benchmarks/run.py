@@ -15,6 +15,8 @@
   odometry -> odometry_drift         (scan-to-map vs frame-to-frame drift +
                                          runtime-weighted frames/s;
                                          writes BENCH_odometry.json)
+  robustness -> robustness           (fault matrix x recovery cascade
+                                         ON/OFF; writes BENCH_robustness.json)
 
 ``--quick`` runs every suite in smoke mode (reduced scenes, 2 frames,
 fewer iterations) so CI can exercise all entry points in seconds.
@@ -28,7 +30,8 @@ import traceback
 from benchmarks import (convergence, kernel_resources, nn_sweep,
                         odometry_drift, power_efficiency,
                         registration_accuracy, registration_latency,
-                        registration_throughput, roofline_report)
+                        registration_throughput, robustness,
+                        roofline_report)
 from benchmarks.common import QUICK_SCENE, emit
 
 SUITES = {
@@ -41,6 +44,7 @@ SUITES = {
     "nn_sweep": nn_sweep.run,
     "convergence": convergence.run,
     "odometry": odometry_drift.run,
+    "robustness": robustness.run,
 }
 
 # Smoke-mode kwargs per suite (reduced scenes, 2 frames, short loops).
@@ -54,7 +58,8 @@ QUICK_KWARGS = {
 # Suites whose smoke mode is a different entry point, not just kwargs.
 QUICK_SUITES = {"nn_sweep": nn_sweep.run_quick,
                 "convergence": convergence.run_quick,
-                "odometry": odometry_drift.run_quick}
+                "odometry": odometry_drift.run_quick,
+                "robustness": robustness.run_quick}
 
 
 def main(argv=None) -> None:

@@ -2,8 +2,10 @@
 from repro.core.api import FppsICP
 from repro.core.engine import (RegistrationEngine, available_engines,
                                get_engine, register_engine)
+from repro.core.health import (HealthThresholds, RegistrationHealth,
+                               assess_registration)
 from repro.core.icp import (ICPParams, ICPResult, icp, icp_batch,
-                            icp_fixed_iterations)
+                            icp_fixed_iterations, scrub_nonfinite)
 from repro.core.nn_search import nn_search, pairwise_sq_dists
 from repro.core.nn_search_grid import (GridQueryStats, grid_nn_fn,
                                        neighborhood_stats, nn_search_grid)
@@ -21,6 +23,8 @@ __all__ = [
     "FppsICP", "ICPParams", "ICPResult", "RegistrationEngine",
     "available_engines", "get_engine", "register_engine",
     "icp", "icp_batch", "icp_fixed_iterations", "icp_pyramid",
+    "scrub_nonfinite", "HealthThresholds", "RegistrationHealth",
+    "assess_registration",
     "PyramidEngine", "grid_nn_fn", "nn_search_grid",
     "OdometryPipeline", "OdometryConfig", "FrameDiagnostics",
     "GridQueryStats", "neighborhood_stats",

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.icp import (ICPParams, ICPResult, icp, icp_batch,
-                            icp_fixed_iterations)
+                            icp_fixed_iterations, scrub_nonfinite)
 from repro.data.collate import PAD_SENTINEL, bucket_size
 
 
@@ -282,6 +282,10 @@ class PallasEngine(RegistrationEngine):
 
         def run(src, dst, T0, sv, dv):
             self._note_trace("single", params, src.shape, dst.shape)
+            # Scrub before any frame-scope prep: a NaN row would poison
+            # the normal estimation and the resident target/grid builds.
+            src, sv = scrub_nonfinite(src, sv)
+            dst, dv = scrub_nonfinite(dst, dv)
             normals = _target_normals(dst, params, dv)
             if params.fused:
                 fused_fn = self._make_fused_fn(dst, params, dv, normals)
@@ -306,6 +310,8 @@ class PallasEngine(RegistrationEngine):
                                       (src_b.shape[0], 4, 4))
 
             def one(src, dst, T0_, sv_, dv_):
+                src, sv_ = scrub_nonfinite(src, sv_)
+                dst, dv_ = scrub_nonfinite(dst, dv_)
                 normals = _target_normals(dst, params, dv_)
                 if params.fused:
                     fused_fn = self._make_fused_fn(dst, params, dv_, normals)
@@ -362,6 +368,10 @@ class DistributedEngine(RegistrationEngine):
 
         def run(src_b, dst_b, T0, sv, dv):
             self._note_trace("batch", params, src_b.shape, dst_b.shape)
+            # Scrub before sharding/normals: NaN rows must not cross the
+            # shard_map boundary or reach the per-frame normal estimate.
+            src_b, sv = scrub_nonfinite(src_b, sv)
+            dst_b, dv = scrub_nonfinite(dst_b, dv)
             b = src_b.shape[0]
             # The frame axis must divide the mesh's frame_axes extent; pad
             # by repeating frame 0 and slice the results back off.

@@ -37,8 +37,36 @@ from repro.core import transform as tf
 from repro.core.nn_search import nn_search
 from repro.core.point_to_plane import (robust_weights, solve_normal_equations,
                                        solve_point_to_plane)
+from repro.data.collate import PAD_SENTINEL
 
 MINIMIZERS = ("point_to_point", "point_to_plane")
+
+
+def scrub_nonfinite(points: jax.Array | None,
+                    valid: jax.Array | None = None):
+    """Sentinel-mask non-finite rows at the engine boundary (DESIGN.md §12).
+
+    A single NaN/Inf row would otherwise poison every downstream
+    accumulation it touches: the matmul distance expansion (NaN spreads
+    along its whole row), voxel-grid origin/cell assignment
+    (``floor(NaN)``), and the fused moment sums. One elementwise pass
+    replaces such rows with the far ``PAD_SENTINEL`` (the exact convention
+    collate pads already use — never wins an argmin, always fails the
+    gate) and drops them from ``valid`` so minimiser weights and inlier
+    denominators exclude them.
+
+    Works on (..., N, 3) clouds with (..., N) masks; ``points=None``
+    passes through (engines with correspond/fused closures may have no
+    target cloud). For all-finite inputs the rewrite is the identity, so
+    clean-path results are bit-identical.
+    """
+    if points is None:
+        return None, valid
+    finite = jnp.all(jnp.isfinite(points), axis=-1)
+    valid = finite if valid is None else jnp.logical_and(valid, finite)
+    points = jnp.where(valid[..., None], points,
+                       jnp.asarray(PAD_SENTINEL, points.dtype))
+    return points, valid
 
 
 class ICPParams(NamedTuple):
@@ -276,8 +304,14 @@ def icp(source: jax.Array, target: jax.Array | None,
     stage entirely (``nn_fn``/``correspond_fn`` are then unused); when no
     ``fused_fn`` is supplied a resident-grid default is built from
     ``target`` at trace scope.
+
+    Non-finite rows in either cloud are sentinel-masked at this boundary
+    (:func:`scrub_nonfinite`) — a NaN point changes the inlier
+    denominator, never the transform.
     """
     _check_minimizer(params)
+    source, src_valid = scrub_nonfinite(source, src_valid)
+    target, dst_valid = scrub_nonfinite(target, dst_valid)
     if params.fused:
         fused_fn = _resolve_fused_fn(target, params, fused_fn, dst_valid,
                                      target_normals)
@@ -323,6 +357,8 @@ def icp_fixed_iterations(source, target, params: ICPParams = ICPParams(),
     and roofline (while_loop trip counts are data-dependent; scan gives the
     compiler a static schedule, mirroring the paper's fixed 50-iteration cap)."""
     _check_minimizer(params)
+    source, src_valid = scrub_nonfinite(source, src_valid)
+    target, dst_valid = scrub_nonfinite(target, dst_valid)
     if params.fused:
         fused_fn = _resolve_fused_fn(target, params, fused_fn, dst_valid,
                                      target_normals)

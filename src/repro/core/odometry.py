@@ -1,4 +1,4 @@
-"""Streaming scan-to-map odometry on the engine layer (DESIGN.md §10).
+"""Streaming scan-to-map odometry on the engine layer (DESIGN.md §10, §12).
 
 The paper's headline numbers are measured on KITTI odometry *streams*, not
 isolated frame pairs; this module is the streaming subsystem that turns
@@ -9,32 +9,78 @@ per-frame registration into a trajectory:
     per-frame error stops compounding into a random walk: the map is the
     common anchor, and revisited structure refines it.
   * **constant-velocity warm start** — the motion model predicts each
-    frame's pose from the last two (``T_pred = T_k @ (T_{k-1}^{-1} T_k)``)
-    and feeds it through ``initial_transform``, cutting iterations on
-    smooth motion and keeping the basin of attraction centred under fast
-    motion.
-  * **degeneracy guard** — a frame whose registration comes back
-    ``degenerate`` (zero-inlier freeze, ``core.icp``) or under
-    ``min_inlier_frac`` is *rejected*: the pose falls back to the motion
-    model's prediction and the scan is NOT fused into the map, so one bad
-    frame cannot poison the anchor every later frame registers against.
+    frame's pose from the tracked inter-frame velocity
+    (``T_pred = T_k @ v``, ``v = T_{k-1}^{-1} T_k`` after each accepted
+    frame) and feeds it through ``initial_transform``, cutting iterations
+    on smooth motion and keeping the basin of attraction centred under
+    fast motion. On a *rejected* frame the velocity **decays toward
+    identity** (``velocity_decay`` per frame) — without the decay a
+    multi-frame sensor dropout has the platform coasting at full speed
+    forever, and the prediction error compounds geometrically.
+  * **health-gated recovery cascade** (§12) — every registration is
+    distilled into a :class:`~repro.core.health.RegistrationHealth`
+    verdict (inlier mass, final RMSE, degeneracy, pose jump vs. the
+    motion model, scan-outside-map fraction). A non-OK frame walks a
+    bounded retry ladder instead of being trusted or dropped outright:
+
+      tier 1 ``widen``      same map, widened gate + coarser pyramid
+                            schedule (occlusion/dropout shrink overlap;
+                            a wider basin re-acquires it)
+      tier 2 ``fallback``   engine fallback to the unfused dense-XLA
+                            path with the warm start *discarded* (a
+                            poisoned motion-model prediction is the
+                            failure being escaped)
+      tier 3 ``wide_basin`` wide-basin relocalization: very coarse-to-
+                            fine schedule, 4x gate, restarted from the
+                            last accepted pose
+      tier 4 (implicit)     coast on the decayed motion model and
+                            **quarantine** the frame — the pose is a
+                            prediction, the scan is NOT fused, so one
+                            bad frame cannot poison the anchor every
+                            later frame registers against
+
+    The first tier that comes back OK wins; if none does, the least-bad
+    SUSPECT attempt (fewest tripped signals, then smallest jump from the
+    prediction) is accepted as the *output* pose but the scan is
+    **quarantined** — not fused into the map — so a merely-plausible
+    pose cannot poison the anchor; only an all-FAILED ladder coasts.
+    The ladder is bounded: at most ``1 + len(recovery_tiers)``
+    registrations per frame.
+  * **sensor-boundary scrubbing** — NaN/Inf rows are scrubbed off the
+    scan before anything (even the voxel downsample's min-derived lattice
+    origin) can see them.
 
 Per-frame diagnostics (iterations, inlier fraction, map occupancy,
-accept/reject) are first-class outputs — a stream you cannot observe is a
-stream you cannot trust.
+health verdict, recovery tier, accept/quarantine) are first-class
+outputs — a stream you cannot observe is a stream you cannot trust.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import get_engine
-from repro.core.icp import ICPParams
+from repro.core.health import (FAILED, OK, SUSPECT, HealthThresholds,
+                               RegistrationHealth, assess_registration,
+                               normal_equation_condition)
+from repro.core.icp import ICPParams, scrub_nonfinite
 from repro.core.transform import transform_points
+from repro.data.normals import NormalParams, estimate_normals
 from repro.data.submap import Submap, SubmapParams
 from repro.data.voxelize import voxel_downsample
+
+# Retry-tier pyramid schedules: ((voxel_m, iters, max_points), ...).
+# ``widen`` doubles the basin (coarse 8 m level re-acquires overlap lost
+# to occlusion/dropout); ``wide_basin`` starts at 16 m — a relocalization
+# sweep for when even the widened gate cannot see the map.
+_WIDEN_LEVELS = ((8.0, 8, 4096), (4.0, 6, 8192))
+_WIDE_BASIN_LEVELS = ((16.0, 8, 2048), (8.0, 8, 4096), (4.0, 6, 8192))
+
+DEFAULT_RECOVERY_TIERS = ("widen", "fallback", "wide_basin")
 
 
 class OdometryConfig(NamedTuple):
@@ -49,6 +95,11 @@ class OdometryConfig(NamedTuple):
     cell-id sort tail, which is a *spatially biased* truncation (the +x
     end of the scene vanishes first) — poison for odometry. Same for
     ``submap.capacity`` vs the eviction ball (watch ``map_occupancy``).
+
+    With ``recovery=True`` the health thresholds decide accept/reject
+    (``min_inlier_frac`` is subsumed by ``thresholds``); with it off the
+    pipeline keeps the legacy degenerate/``min_inlier_frac`` guard. The
+    velocity decay applies either way — it fixes a bug, not a feature.
     """
 
     # Pyramid engine, polish-only: the finest-level grid NN gives O(27K)
@@ -73,6 +124,22 @@ class OdometryConfig(NamedTuple):
     scan_budget: int = 8192
     motion_model: bool = True
     min_inlier_frac: float = 0.2
+    # -- degradation & recovery (§12) -------------------------------------
+    recovery: bool = True
+    recovery_tiers: tuple = DEFAULT_RECOVERY_TIERS
+    thresholds: HealthThresholds = HealthThresholds()
+    velocity_decay: float = 0.5
+    # Cold-start grace: frames below this index are health-labelled but
+    # never retried — frame 1 registers against a one-scan map with no
+    # velocity estimate, so its rmse/jump signals read SUSPECT on clean
+    # input (cold-start truth, not a fault).
+    warmup_frames: int = 2
+    # Per-frame scan-observability probe: normals on the downsampled scan
+    # -> 6x6 plane normal-equation conditioning. Pose-independent (sensor
+    # frame), computed once per frame; it is the only signal that sees a
+    # sector crop *before* the pose slides (residual metrics read fine
+    # while the unconstrained direction drifts).
+    observability_probe: bool = True
 
 
 class FrameDiagnostics(NamedTuple):
@@ -83,6 +150,43 @@ class FrameDiagnostics(NamedTuple):
     degenerate: bool
     accepted: bool          # False: pose fell back to the motion model
     map_occupancy: float    # submap capacity in use after this frame
+    health: str = OK        # RegistrationHealth verdict for this frame
+    recovery_tier: int = 0  # 0 primary; 1..N retry tier; N+1 coasted
+    pose_jump: float = 0.0  # metres vs. the motion-model prediction
+    quarantined: bool = False   # scan withheld from the map
+
+
+@functools.partial(jax.jit, static_argnames=("nparams",))
+def _scan_plane_system(src: jax.Array, sv: jax.Array,
+                       nparams: NormalParams) -> jax.Array:
+    """6x6 plane normal matrix of the scan against its own estimated
+    normals — the observability probe's device half (one executable per
+    scan-budget shape)."""
+    normals, nvalid = estimate_normals(src, nparams, valid=sv)
+    w = jnp.logical_and(sv, nvalid).astype(jnp.float32)
+    a = jnp.concatenate([jnp.cross(src, normals), normals], axis=-1)
+    return (a * w[:, None]).T @ a
+
+
+def _decay_toward_identity(T: np.ndarray, factor: float) -> np.ndarray:
+    """Shrink a rigid motion: translation scaled by ``factor``, rotation
+    angle scaled by ``factor`` about the same axis (Rodrigues)."""
+    T = np.asarray(T, np.float64)
+    R = T[:3, :3]
+    cos = np.clip((np.trace(R) - 1.0) / 2.0, -1.0, 1.0)
+    angle = float(np.arccos(cos))
+    out = np.eye(4)
+    if angle > 1e-8:
+        axis = np.array([R[2, 1] - R[1, 2], R[0, 2] - R[2, 0],
+                         R[1, 0] - R[0, 1]])
+        axis /= max(np.linalg.norm(axis), 1e-12)
+        K = np.array([[0.0, -axis[2], axis[1]],
+                      [axis[2], 0.0, -axis[0]],
+                      [-axis[1], axis[0], 0.0]])
+        a = angle * factor
+        out[:3, :3] = np.eye(3) + np.sin(a) * K + (1 - np.cos(a)) * (K @ K)
+    out[:3, 3] = factor * T[:3, 3]
+    return out.astype(np.float32)
 
 
 class OdometryPipeline:
@@ -96,7 +200,9 @@ class OdometryPipeline:
     All heavy work runs through the shared engine layer: the submap's
     static capacity means every frame after the first hits one compiled
     executable (one shape, one ``ICPParams``), and the warm start is
-    threaded through the engine's ``initial_transform`` argument.
+    threaded through the engine's ``initial_transform`` argument. Retry
+    tiers are named ``get_engine`` singletons, so their jit caches persist
+    across frames and across pipeline instances.
     """
 
     def __init__(self, config: OdometryConfig = OdometryConfig()):
@@ -110,22 +216,142 @@ class OdometryPipeline:
         self.submap = Submap(config.submap)
         self.poses: list[np.ndarray] = []
         self.diagnostics: list[FrameDiagnostics] = []
+        # inter-frame velocity v = T_{k-1}^{-1} T_k, decayed on rejection
+        self._velocity = np.eye(4, dtype=np.float32)
+        self._coast_streak = 0       # consecutive frames without a pose fix
+        self.recovery_count = 0      # sticky: frames that left tier 0
+        self.quarantined_count = 0   # sticky: frames withheld from the map
 
     # -- motion model ------------------------------------------------------
     def _predict(self) -> np.ndarray:
         """Constant-velocity pose prediction for the incoming frame."""
         if len(self.poses) < 2 or not self.config.motion_model:
             return self.poses[-1]
-        prev, last = self.poses[-2], self.poses[-1]
-        return last @ np.linalg.inv(prev) @ last
+        return (self.poses[-1] @ self._velocity).astype(np.float32)
+
+    # -- health ------------------------------------------------------------
+    def _out_of_lattice_frac(self, res, src, sv) -> float:
+        """Fraction of the (pose-transformed) scan outside the submap
+        lattice — the low-overlap/teleport signal. Pure bounds check
+        against the rolling lattice; no grid build."""
+        p = self.submap.params
+        pts = transform_points(jnp.asarray(res.T, jnp.float32), src)
+        c = jnp.floor((pts - self.submap.origin) / p.voxel_size)
+        inb = jnp.all((c >= 0) & (c < jnp.asarray(p.dims, jnp.float32)),
+                      axis=-1)
+        n_valid = jnp.maximum(jnp.sum(sv), 1)
+        return float(jnp.sum(jnp.logical_and(sv, ~inb)) / n_valid)
+
+    def _assess(self, res, T0, src, sv, condition: float | None = None,
+                trust_prediction: bool = True) -> RegistrationHealth:
+        # The jump signal needs a real prediction: with <2 poses (or the
+        # motion model off) T0 is just the last pose, and "jump" would
+        # penalize genuine ego motion. Reacquire mode also drops it —
+        # after a coast the prediction is exactly what is no longer
+        # trusted, and a *correct* re-acquisition necessarily jumps away
+        # from it.
+        predicted = (T0 if trust_prediction and self.config.motion_model
+                     and len(self.poses) >= 2 else None)
+        return assess_registration(
+            res, predicted=predicted, thresholds=self.config.thresholds,
+            out_of_lattice=self._out_of_lattice_frac(res, src, sv),
+            condition=condition)
+
+    def _scan_condition(self, src, sv) -> float | None:
+        """Observability of the scan itself (pose-independent, once per
+        frame): conditioning of its 6x6 plane system."""
+        if not self.config.observability_probe:
+            return None
+        A = np.asarray(_scan_plane_system(src, sv, NormalParams()),
+                       np.float64)
+        return normal_equation_condition(A)
+
+    # -- recovery tiers ----------------------------------------------------
+    def _tier_attempt(self, name: str, src, sv, map_pts, map_valid, T0):
+        """Run one named retry tier; returns its ICPResult."""
+        cfg = self.config
+        if name == "widen":
+            engine = get_engine("pyramid", levels=_WIDEN_LEVELS)
+            params = cfg.params._replace(
+                max_correspondence_distance=(
+                    2.0 * cfg.params.max_correspondence_distance),
+                robust_scale=2.0 * cfg.params.robust_scale)
+            init = T0                      # keep the warm start
+        elif name == "fallback":
+            engine = get_engine("xla")
+            params = cfg.params
+            init = self.poses[-1]          # warm start discarded
+        elif name == "wide_basin":
+            engine = get_engine("pyramid", levels=_WIDE_BASIN_LEVELS)
+            params = cfg.params._replace(
+                max_correspondence_distance=(
+                    4.0 * cfg.params.max_correspondence_distance),
+                robust_scale=2.0 * cfg.params.robust_scale)
+            init = self.poses[-1]          # relocalize from last good pose
+        else:
+            raise ValueError(f"unknown recovery tier {name!r}; "
+                             f"known: {DEFAULT_RECOVERY_TIERS}")
+        return engine.register(src, map_pts, params, initial_transform=init,
+                               src_valid=sv, dst_valid=map_valid)
+
+    def _cascade(self, src, sv, map_pts, map_valid, T0,
+                 condition: float | None = None, reacquire: bool = False):
+        """Primary attempt + bounded retry ladder. Returns
+        (result_or_None, health, tier): ``None`` result means coast.
+
+        ``reacquire=True`` (the frame after a coast) skips the primary:
+        the prediction's uncertainty has outgrown the narrow gate, so the
+        primary's basin need not contain the truth — it locks onto an
+        alias that *reads* healthy (small jump vs. the equally-stale
+        prediction, ordinary rmse). The coarse-first retry schedules are
+        built for exactly this uncertainty, so the ladder starts there.
+        """
+        cfg = self.config
+        attempts = []
+        if not (reacquire and cfg.recovery_tiers):
+            res = self.engine.register(src, map_pts, cfg.params,
+                                       initial_transform=T0,
+                                       src_valid=sv, dst_valid=map_valid)
+            health = self._assess(res, T0, src, sv, condition)
+            if health.ok or not cfg.recovery:
+                return res, health, 0
+            attempts.append((0, res, health))
+        for tier, name in enumerate(cfg.recovery_tiers, start=1):
+            r = self._tier_attempt(name, src, sv, map_pts, map_valid, T0)
+            h = self._assess(r, T0, src, sv, condition,
+                             trust_prediction=not reacquire)
+            if h.ok:
+                return r, h, tier
+            attempts.append((tier, r, h))
+        # No rung is OK: take the least-bad SUSPECT — fewest tripped
+        # signals, then smallest jump from the prediction. NEVER compare
+        # inlier mass across tiers: a widened gate inflates it by
+        # construction, so the worst pose would win. Ties keep the
+        # earliest tier (the primary's narrow-gate estimate).
+        suspects = [a for a in attempts if a[2].verdict == SUSPECT]
+        if suspects:
+            tier, r, h = min(suspects,
+                             key=lambda a: (len(a[2].reasons),
+                                            a[2].pose_jump_m))
+            return r, h, tier
+        # every rung FAILED: coast (tier N+1), report the primary's health
+        return None, attempts[0][2], len(cfg.recovery_tiers) + 1
 
     # -- streaming API -----------------------------------------------------
-    def process(self, scan) -> tuple[np.ndarray, FrameDiagnostics]:
-        """Ingest one sensor-frame scan; returns (pose, diagnostics)."""
+    def process(self, scan, valid=None) -> tuple[np.ndarray, FrameDiagnostics]:
+        """Ingest one sensor-frame scan; returns (pose, diagnostics).
+
+        ``valid`` is an optional (N,) row mask (collate conventions).
+        NaN/Inf rows are scrubbed here, before even the voxel downsample's
+        min-derived lattice origin can see them.
+        """
         cfg = self.config
-        src, sv = voxel_downsample(jnp.asarray(scan, jnp.float32),
-                                   cfg.scan_voxel,
-                                   max_points=cfg.scan_budget)
+        pts = jnp.asarray(scan, jnp.float32)
+        if valid is not None:
+            valid = jnp.asarray(valid, bool)
+        pts, valid = scrub_nonfinite(pts, valid)
+        src, sv = voxel_downsample(pts, cfg.scan_voxel,
+                                   max_points=cfg.scan_budget, valid=valid)
         frame = len(self.poses)
         if frame == 0:
             pose = np.eye(4, dtype=np.float32)
@@ -133,28 +359,87 @@ class OdometryPipeline:
             diag = FrameDiagnostics(frame=0, iterations=0, inlier_frac=1.0,
                                     rmse=0.0, degenerate=False, accepted=True,
                                     map_occupancy=self.submap.occupancy())
+        elif int(jnp.sum(sv)) == 0:
+            # dropped frame (no usable returns): coast without spending a
+            # registration, quarantine, decay the velocity
+            pose = np.asarray(self._predict(), np.float32)
+            self._velocity = _decay_toward_identity(self._velocity,
+                                                    cfg.velocity_decay)
+            self._coast_streak += 1
+            tier = len(cfg.recovery_tiers) + 1 if cfg.recovery else 0
+            if tier > 0:
+                self.recovery_count += 1
+            self.quarantined_count += 1
+            diag = FrameDiagnostics(frame=frame, iterations=0,
+                                    inlier_frac=0.0, rmse=float("inf"),
+                                    degenerate=True, accepted=False,
+                                    map_occupancy=self.submap.occupancy(),
+                                    health=FAILED, recovery_tier=tier,
+                                    quarantined=True)
         else:
             T0 = self._predict()
             map_pts, map_valid = self.submap.target()
-            res = self.engine.register(src, map_pts, cfg.params,
-                                       initial_transform=T0,
-                                       src_valid=sv, dst_valid=map_valid)
-            degenerate = bool(res.degenerate)
-            inlier_frac = float(res.inlier_frac)
-            accepted = (not degenerate
-                        and inlier_frac >= cfg.min_inlier_frac)
-            pose = (np.asarray(res.T, np.float32) if accepted
-                    else np.asarray(T0, np.float32))
+            reacquire = (cfg.recovery and frame >= cfg.warmup_frames
+                         and self._coast_streak > 0)
+            if cfg.recovery and frame >= cfg.warmup_frames:
+                condition = self._scan_condition(src, sv)
+                res, health, tier = self._cascade(
+                    src, sv, map_pts, map_valid, T0, condition,
+                    reacquire=reacquire)
+                accepted = res is not None
+            else:
+                res = self.engine.register(src, map_pts, cfg.params,
+                                           initial_transform=T0,
+                                           src_valid=sv, dst_valid=map_valid)
+                health = self._assess(res, T0, src, sv)
+                tier = 0
+                accepted = (not bool(res.degenerate)
+                            and float(res.inlier_frac)
+                            >= cfg.min_inlier_frac)
+            # A SUSPECT pose is good enough to *output* (jump-bounded by
+            # the thresholds) but not good enough to FUSE: one wrong scan
+            # in the submap poisons the anchor every later frame registers
+            # against, which is how transient faults become permanent
+            # drift. Legacy mode (recovery off) keeps fuse == accept.
+            fused = accepted and (not cfg.recovery or health.verdict == OK)
+            self._coast_streak = 0 if accepted else self._coast_streak + 1
             if accepted:
-                self.submap.insert(transform_points(jnp.asarray(pose), src),
-                                   center=pose[:3, 3], valid=sv)
-            diag = FrameDiagnostics(frame=frame,
-                                    iterations=int(res.iterations),
-                                    inlier_frac=inlier_frac,
-                                    rmse=float(res.rmse),
-                                    degenerate=degenerate,
-                                    accepted=accepted,
-                                    map_occupancy=self.submap.occupancy())
+                pose = np.asarray(res.T, np.float32)
+                prev = self.poses[-1]
+                if not reacquire:
+                    self._velocity = (np.linalg.inv(prev) @ pose).astype(
+                        np.float32)
+                # else: the previous (coasted) pose was wrong, so the pose
+                # delta is correction + motion entangled — the decayed
+                # coast velocity is the better motion estimate; keep it.
+                if fused:
+                    self.submap.insert(
+                        transform_points(jnp.asarray(pose), src),
+                        center=pose[:3, 3], valid=sv)
+            else:
+                pose = np.asarray(T0, np.float32)
+                # decay the motion model: coasting frames must bleed speed
+                # or a dropout burst extrapolates at full velocity forever
+                self._velocity = _decay_toward_identity(self._velocity,
+                                                        cfg.velocity_decay)
+            if tier > 0:
+                self.recovery_count += 1
+            if not fused:
+                self.quarantined_count += 1
+            last = res if res is not None else None
+            diag = FrameDiagnostics(
+                frame=frame,
+                iterations=int(last.iterations) if last is not None else 0,
+                inlier_frac=(float(last.inlier_frac)
+                             if last is not None else 0.0),
+                rmse=float(last.rmse) if last is not None else float("inf"),
+                degenerate=(bool(last.degenerate)
+                            if last is not None else True),
+                accepted=accepted,
+                map_occupancy=self.submap.occupancy(),
+                health=health.verdict, recovery_tier=tier,
+                pose_jump=health.pose_jump_m,
+                quarantined=not fused)
         self.poses.append(pose)
         self.diagnostics.append(diag)
         return pose, diag
@@ -173,3 +458,17 @@ class OdometryPipeline:
 
     def rejected_frames(self) -> int:
         return sum(1 for d in self.diagnostics if not d.accepted)
+
+    def health_counts(self) -> dict[str, int]:
+        """Verdict histogram over the stream (``{"ok": ..., ...}``)."""
+        out = {OK: 0, SUSPECT: 0, FAILED: 0}
+        for d in self.diagnostics:
+            out[d.health] += 1
+        return out
+
+    def tier_counts(self) -> dict[int, int]:
+        """Histogram of the recovery tier each frame settled at."""
+        out: dict[int, int] = {}
+        for d in self.diagnostics:
+            out[d.recovery_tier] = out.get(d.recovery_tier, 0) + 1
+        return out

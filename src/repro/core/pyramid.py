@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import RegistrationEngine, register_engine
-from repro.core.icp import ICPParams, ICPResult, icp, icp_fixed_iterations
+from repro.core.icp import (ICPParams, ICPResult, icp, icp_fixed_iterations,
+                            scrub_nonfinite)
 from repro.core.nn_search_grid import (GridQueryStats, grid_nn_fn,
                                        neighborhood_stats)
 from repro.data.voxelize import build_voxel_grid, voxel_downsample
@@ -88,6 +89,11 @@ def icp_pyramid(source: jax.Array, target: jax.Array,
     their single loop).
     """
     n, m = source.shape[0], target.shape[0]
+    # Scrub before the coarse downsamples and the polish grid build: a
+    # single NaN row would poison the lattice origin (min over a NaN is
+    # NaN) and every centroid its cell touches.
+    source, src_valid = scrub_nonfinite(source, src_valid)
+    target, dst_valid = scrub_nonfinite(target, dst_valid)
     T = (jnp.eye(4, dtype=source.dtype) if initial_transform is None
          else initial_transform)
 

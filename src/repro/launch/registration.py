@@ -34,29 +34,47 @@ from repro.data.pointcloud import (SceneConfig, frame_pair_from_world,
 def run_scan_to_map(args, cfg, params):
     """Streaming scan-to-map odometry over a resampled scan stream."""
     from repro.core.odometry import OdometryConfig, OdometryPipeline
+    from repro.data.corruption import apply_faults, parse_fault_spec
 
+    faults = parse_fault_spec(args.faults) if args.faults else None
     scans = sequence_scans(args.seq, args.frames + 1, cfg)
     pipe = OdometryPipeline(OdometryConfig(
         engine=args.engine, params=params._replace(max_iterations=30)))
     gt = gt_pose(args.seq)
-    pipe.process(scans[0])           # frame 0 initialises the map
+    pipe.process(scans[0])           # frame 0 initialises the map, clean
     rows = []
     for frame in range(1, args.frames + 1):
+        scan, valid = scans[frame], None
+        if faults is not None:
+            scan, valid = apply_faults(scan, faults, seed=args.fault_seed,
+                                       frame=frame)
         t0 = time.time()
-        pose, diag = pipe.process(scans[frame])
+        pose, diag = pipe.process(scan, valid=valid)
         t_frame = time.time() - t0
         drift = float(np.linalg.norm(pose[:3, 3] - gt(frame)[:3, 3]))
         rows.append((frame, diag.iterations, diag.inlier_frac, t_frame, drift))
+        flags = diag.health + (" tier %d" % diag.recovery_tier
+                               if diag.recovery_tier else "")
+        if diag.quarantined:
+            flags += " quarantined"
         print(f"frame {frame}: iters {diag.iterations:2d} "
               f"inliers {diag.inlier_frac:.2f} "
               f"map occ {diag.map_occupancy:.2f} | t {t_frame * 1e3:7.1f}ms | "
-              f"drift {drift:.3f} m")
+              f"drift {drift:.3f} m | {flags}")
     steady = [r[3] for r in rows[2:]] or [rows[-1][3]]
+    health = pipe.health_counts()
+    tiers = pipe.tier_counts()
     print(f"\nscan_to_map engine={args.engine}: {args.frames} frames, "
           f"steady-state {np.mean(steady) * 1e3:.1f} ms/frame "
           f"({1.0 / np.mean(steady):.2f} frames/s), "
           f"final drift {rows[-1][4]:.3f} m, "
           f"rejected {pipe.rejected_frames()}")
+    print(f"health ok/suspect/failed: {health['ok']}/{health['suspect']}/"
+          f"{health['failed']} | tiers "
+          + " ".join(f"{t}:{n}" for t, n in sorted(tiers.items()))
+          + f" | recovered {pipe.recovery_count}"
+          f" quarantined {pipe.quarantined_count}"
+          + (f" | faults '{args.faults}'" if faults is not None else ""))
     return rows
 
 
@@ -86,6 +104,13 @@ def main(argv=None):
     ap.add_argument("--fused", action="store_true",
                     help="single-pass fused iteration kernel "
                          "(ICPParams.fused, DESIGN.md §11)")
+    ap.add_argument("--faults", default=None,
+                    help="scan_to_map only: comma-separated fault spec "
+                         "injected into every streamed frame, e.g. "
+                         "'dropout:0.3,occlusion:90deg,nan:10' "
+                         "(repro.data.corruption)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the deterministic fault injectors")
     ap.add_argument("--per-frame", action="store_true",
                     help="loop FppsICP.align() per frame instead of one batch")
     ap.add_argument("--reduced", action="store_true",

@@ -1,0 +1,69 @@
+"""Chaos suite (marker: ``chaos``): every fault family of the robustness
+matrix streamed through the recovery cascade.
+
+These are survival tests, not quality tests — the >=2x improvement
+contract lives in ``benchmarks/robustness.py`` and its regression guard.
+Here each family only has to keep the *invariants* that make the cascade
+safe to ship: finite poses whatever the sensor emits, quarantine
+accounting that adds up, and bit-identical replays at a fixed seed.
+"""
+import numpy as np
+import pytest
+
+from benchmarks.common import QUICK_SCENE
+from benchmarks.robustness import FAULT_MATRIX, ROBUST_CONFIG
+from repro.core.health import VERDICTS
+from repro.core.odometry import OdometryPipeline
+from repro.data.corruption import apply_faults, parse_fault_spec
+from repro.data.pointcloud import sequence_scans
+
+pytestmark = pytest.mark.chaos
+
+FRAMES = 6
+BURST = (3, 4)
+CHAOS_CONFIG = ROBUST_CONFIG._replace(
+    params=ROBUST_CONFIG.params._replace(max_iterations=12))
+
+
+def _stream(spec_str: str, seed: int = 0) -> OdometryPipeline:
+    scans = sequence_scans(2, FRAMES, QUICK_SCENE)
+    spec = parse_fault_spec(spec_str)
+    pipe = OdometryPipeline(CHAOS_CONFIG)
+    for f, scan in enumerate(scans):
+        if f in BURST:
+            pts, valid = apply_faults(scan, spec, seed=seed, frame=f)
+        else:
+            pts, valid = scan, None
+        pipe.process(pts, valid=valid)
+    return pipe
+
+
+@pytest.mark.parametrize("family", sorted(FAULT_MATRIX))
+def test_family_stream_survives(family):
+    pipe = _stream(FAULT_MATRIX[family])
+    poses = np.stack(pipe.poses)
+    assert np.all(np.isfinite(poses)), f"{family}: non-finite pose escaped"
+    # every processed frame got exactly one verdict, and the sticky
+    # counters stay consistent with the per-frame diagnostics
+    health = pipe.health_counts()
+    assert set(health) == set(VERDICTS)
+    assert sum(health.values()) == len(pipe.diagnostics)
+    assert pipe.quarantined_count == sum(d.quarantined
+                                         for d in pipe.diagnostics)
+    assert pipe.recovery_count == sum(d.recovery_tier > 0
+                                      for d in pipe.diagnostics)
+
+
+@pytest.mark.parametrize("family", ("crop", "drop"))
+def test_family_stream_is_deterministic(family):
+    a = _stream(FAULT_MATRIX[family], seed=7)
+    b = _stream(FAULT_MATRIX[family], seed=7)
+    np.testing.assert_array_equal(np.stack(a.poses), np.stack(b.poses))
+    assert [d.recovery_tier for d in a.diagnostics] == \
+           [d.recovery_tier for d in b.diagnostics]
+
+
+def test_stacked_faults_survive():
+    # the composable worst case: sector blackout + dropout + NaN rows
+    pipe = _stream("occlusion:120deg,dropout:0.5,nan:32")
+    assert np.all(np.isfinite(np.stack(pipe.poses)))

@@ -1,0 +1,205 @@
+"""Property-style tests for the sensor-fault injectors (DESIGN.md §12).
+
+Two contracts, pinned per injector:
+
+  * **determinism** — same (cloud, seed) in, byte-identical cloud out; a
+    different seed produces a different cloud. No injector may touch
+    global RNG state.
+  * **collate conventions** — (points, valid) in/out; removed rows are
+    masked invalid AND parked at the far ``PAD_SENTINEL``; appended rows
+    are flagged valid; ``inject_nonfinite`` is the documented exception
+    (corrupt rows stay valid — that is the fault being modelled).
+"""
+import numpy as np
+import pytest
+
+from repro.data.collate import PAD_SENTINEL
+from repro.data.corruption import (FAULT_NAMES, apply_faults, duplicate_points,
+                                   fault_seed, frame_drop, ghost_points,
+                                   inject_nonfinite, low_overlap_crop,
+                                   parse_fault_spec, random_dropout,
+                                   range_noise, sector_occlusion)
+
+INJECTORS = {
+    "occlusion": lambda p, v, s: sector_occlusion(p, v, seed=s,
+                                                  width_deg=90.0),
+    "dropout": lambda p, v, s: random_dropout(p, v, seed=s, frac=0.3),
+    "crop": lambda p, v, s: low_overlap_crop(p, v, seed=s, keep_frac=0.4),
+    "drop": lambda p, v, s: frame_drop(p, v, seed=s),
+    "noise": lambda p, v, s: range_noise(p, v, seed=s, std=0.05),
+    "tnoise": lambda p, v, s: range_noise(p, v, seed=s, std=0.05,
+                                          heavy_tail=True),
+    "ghost": lambda p, v, s: ghost_points(p, v, seed=s, count=64),
+    "dup": lambda p, v, s: duplicate_points(p, v, seed=s, count=64),
+    "nan": lambda p, v, s: inject_nonfinite(p, v, seed=s, count=8),
+}
+
+
+@pytest.fixture(scope="module")
+def cloud():
+    rng = np.random.default_rng(7)
+    pts = rng.uniform(-30, 30, (2048, 3)).astype(np.float32)
+    valid = np.ones(2048, bool)
+    valid[-100:] = False          # a collate-padded tail
+    pts[~valid] = PAD_SENTINEL
+    return pts, valid
+
+
+@pytest.mark.parametrize("name", sorted(INJECTORS))
+def test_same_seed_identical(cloud, name):
+    pts, valid = cloud
+    p1, v1 = INJECTORS[name](pts, valid, 42)
+    p2, v2 = INJECTORS[name](pts, valid, 42)
+    np.testing.assert_array_equal(p1, p2)
+    np.testing.assert_array_equal(v1, v2)
+
+
+@pytest.mark.parametrize("name",
+                         sorted(set(INJECTORS) - {"drop"}))
+def test_different_seed_differs(cloud, name):
+    # frame_drop is seed-independent by design (the whole frame goes).
+    pts, valid = cloud
+    p1, v1 = INJECTORS[name](pts, valid, 1)
+    p2, v2 = INJECTORS[name](pts, valid, 2)
+    assert (not np.array_equal(p1, p2)) or (not np.array_equal(v1, v2))
+
+
+@pytest.mark.parametrize("name", sorted(INJECTORS))
+def test_inputs_untouched(cloud, name):
+    pts, valid = cloud
+    before_p, before_v = pts.copy(), valid.copy()
+    INJECTORS[name](pts, valid, 3)
+    np.testing.assert_array_equal(pts, before_p)
+    np.testing.assert_array_equal(valid, before_v)
+
+
+@pytest.mark.parametrize("name", sorted(INJECTORS))
+def test_collate_conventions(cloud, name):
+    pts, valid = cloud
+    out_p, out_v = INJECTORS[name](pts, valid, 5)
+    assert out_p.dtype == np.float32 and out_v.dtype == bool
+    assert out_p.shape[0] == out_v.shape[0] >= pts.shape[0]
+    if name == "nan":
+        return  # documented exception: corrupt rows stay valid
+    # Every invalid row sits at the far sentinel (mask-unaware safe)…
+    assert np.all(out_p[~out_v] == PAD_SENTINEL)
+    # …and every valid row is finite.
+    assert np.all(np.isfinite(out_p[out_v]))
+
+
+def test_dropout_rate(cloud):
+    pts, valid = cloud
+    _, v = random_dropout(pts, valid, seed=0, frac=0.3)
+    frac = 1.0 - v.sum() / valid.sum()
+    assert 0.2 < frac < 0.4
+
+
+def test_occlusion_removes_sector_only():
+    ang = np.linspace(-np.pi, np.pi, 720, endpoint=False)
+    pts = np.column_stack([10 * np.cos(ang), 10 * np.sin(ang),
+                           np.zeros_like(ang)]).astype(np.float32)
+    _, v = sector_occlusion(pts, None, seed=0, width_deg=90.0, center_deg=0.0)
+    az = np.degrees(ang)
+    inside = np.abs(az) <= 45.0
+    assert not v[inside].any()
+    assert v[~inside].all()
+
+
+def test_crop_keeps_contiguous_fraction(cloud):
+    pts, valid = cloud
+    _, v = low_overlap_crop(pts, valid, seed=0, keep_frac=0.4)
+    kept = v.sum() / valid.sum()
+    assert 0.25 < kept < 0.55     # azimuth density is not uniform
+
+
+def test_frame_drop_all_invalid(cloud):
+    pts, valid = cloud
+    p, v = frame_drop(pts, valid, seed=0)
+    assert not v.any()
+    assert np.all(p == PAD_SENTINEL)
+
+
+def test_noise_moves_along_ray(cloud):
+    pts, valid = cloud
+    p, v = range_noise(pts, valid, seed=0, std=0.1)
+    np.testing.assert_array_equal(v, valid)
+    delta = p[valid] - pts[valid]
+    r = np.linalg.norm(pts[valid], axis=1)
+    # Displacement is radial: parallel to the original ray.
+    cross = np.linalg.norm(np.cross(delta, pts[valid] / r[:, None]), axis=1)
+    assert np.max(cross) < 1e-3
+    # Invalid rows untouched.
+    np.testing.assert_array_equal(p[~valid], pts[~valid])
+
+
+def test_heavy_tail_has_outliers(cloud):
+    pts, valid = cloud
+    pg, _ = range_noise(pts, valid, seed=0, std=0.05)
+    pt, _ = range_noise(pts, valid, seed=0, std=0.05, heavy_tail=True)
+    dg = np.linalg.norm(pg[valid] - pts[valid], axis=1)
+    dt = np.linalg.norm(pt[valid] - pts[valid], axis=1)
+    assert dt.max() > 4 * dg.max()
+
+
+def test_ghost_appends_valid_cluster(cloud):
+    pts, valid = cloud
+    p, v = ghost_points(pts, valid, seed=0, count=64)
+    assert p.shape[0] == pts.shape[0] + 64
+    assert v[-64:].all()
+    spread = np.std(p[-64:], axis=0)
+    assert np.all(spread < 5.0)   # a coherent blob, not uniform noise
+
+
+def test_duplicates_are_exact_copies(cloud):
+    pts, valid = cloud
+    p, v = duplicate_points(pts, valid, seed=0, count=64)
+    assert p.shape[0] == pts.shape[0] + 64
+    orig = {tuple(row) for row in pts[valid]}
+    assert all(tuple(row) in orig for row in p[-64:])
+
+
+def test_nonfinite_rows_stay_valid(cloud):
+    pts, valid = cloud
+    p, v = inject_nonfinite(pts, valid, seed=0, count=16, inf_frac=0.5)
+    np.testing.assert_array_equal(v, valid)
+    bad = ~np.isfinite(p).all(axis=1)
+    assert bad.sum() == 16
+    assert v[bad].all()           # the sensor does NOT flag its garbage
+    assert np.isinf(p).any() and np.isnan(p).any()
+
+
+# -- spec parsing / composition ---------------------------------------------
+
+def test_parse_fault_spec_roundtrip():
+    spec = parse_fault_spec("dropout:0.3, occlusion:90deg ,nan:10,drop")
+    assert [f.name for f in spec] == ["dropout", "occlusion", "nan", "drop"]
+    assert spec[0].kwargs == {"frac": 0.3}
+    assert spec[1].kwargs == {"width_deg": 90.0}
+    assert spec[2].kwargs == {"count": 10}
+    assert parse_fault_spec(spec) == spec       # parsed form passes through
+
+
+def test_parse_fault_spec_unknown():
+    with pytest.raises(ValueError, match="unknown fault"):
+        parse_fault_spec("gremlins:3")
+
+
+def test_apply_faults_deterministic(cloud):
+    pts, valid = cloud
+    spec = "dropout:0.2,noise:0.05,ghost:32,nan:4"
+    p1, v1 = apply_faults(pts, spec, seed=9, frame=3, valid=valid)
+    p2, v2 = apply_faults(pts, spec, seed=9, frame=3, valid=valid)
+    np.testing.assert_array_equal(p1, p2)
+    np.testing.assert_array_equal(v1, v2)
+    p3, _ = apply_faults(pts, spec, seed=9, frame=4, valid=valid)
+    assert p3.shape != p1.shape or not np.array_equal(p3, p1)
+
+
+def test_fault_seed_stable():
+    assert fault_seed(1, 2, "dropout") == fault_seed(1, 2, "dropout")
+    assert fault_seed(1, 2, "dropout") != fault_seed(1, 3, "dropout")
+    assert fault_seed(1, 2, "dropout") != fault_seed(1, 2, "noise")
+
+
+def test_every_spec_name_has_injector():
+    assert set(FAULT_NAMES) == set(INJECTORS)

@@ -1,0 +1,145 @@
+"""Registration-health verdicts (core/health.py)."""
+import numpy as np
+import pytest
+
+from repro.core.health import (FAILED, OK, SUSPECT, HealthThresholds,
+                               assess_registration, normal_equation_condition,
+                               plane_normal_matrix, pose_jump)
+from repro.core.transform import make_transform, rotation_from_axis_angle
+
+
+class FakeResult:
+    """ICPResult-shaped bag for driving the assessor directly."""
+
+    def __init__(self, T=None, rmse=0.05, inlier_frac=0.9, degenerate=False):
+        self.T = np.eye(4) if T is None else T
+        self.rmse = rmse
+        self.inlier_frac = inlier_frac
+        self.degenerate = degenerate
+
+
+def test_clean_result_is_ok():
+    h = assess_registration(FakeResult(), predicted=np.eye(4))
+    assert h.verdict == OK
+    assert h.ok
+    assert h.reasons == ()
+
+
+def test_low_inlier_frac_tiers():
+    sus = assess_registration(FakeResult(inlier_frac=0.15))
+    bad = assess_registration(FakeResult(inlier_frac=0.05))
+    assert sus.verdict == SUSPECT and "inlier_frac:suspect" in sus.reasons
+    assert bad.verdict == FAILED and "inlier_frac:failed" in bad.reasons
+
+
+def test_high_rmse_tiers():
+    assert assess_registration(FakeResult(rmse=0.8)).verdict == SUSPECT
+    assert assess_registration(FakeResult(rmse=5.0)).verdict == FAILED
+
+
+def test_degenerate_always_fails():
+    h = assess_registration(FakeResult(degenerate=True, rmse=float("inf")))
+    assert h.verdict == FAILED
+    assert "degenerate:failed" in h.reasons
+
+
+def test_nonfinite_pose_fails():
+    T = np.eye(4)
+    T[0, 3] = np.nan
+    h = assess_registration(FakeResult(T=T))
+    assert h.verdict == FAILED
+    assert "nonfinite_pose:failed" in h.reasons
+
+
+def test_pose_jump_vs_prediction():
+    T = make_transform(np.eye(3), np.array([2.0, 0.0, 0.0]))
+    h = assess_registration(FakeResult(T=np.asarray(T)),
+                            predicted=np.eye(4))
+    assert h.verdict == SUSPECT
+    assert h.pose_jump_m == pytest.approx(2.0)
+    far = make_transform(np.eye(3), np.array([10.0, 0.0, 0.0]))
+    assert assess_registration(FakeResult(T=np.asarray(far)),
+                               predicted=np.eye(4)).verdict == FAILED
+
+
+def test_rot_jump_vs_prediction():
+    R = np.asarray(rotation_from_axis_angle(np.array([0.0, 0.0, 1.0]), 0.3))
+    T = np.asarray(make_transform(R, np.zeros(3)))
+    h = assess_registration(FakeResult(T=T), predicted=np.eye(4))
+    assert h.verdict == SUSPECT
+    assert h.rot_jump_rad == pytest.approx(0.3, abs=1e-6)
+
+
+def test_no_prediction_skips_jump_signals():
+    T = np.asarray(make_transform(np.eye(3), np.array([50.0, 0.0, 0.0])))
+    assert assess_registration(FakeResult(T=T)).verdict == OK
+
+
+def test_out_of_lattice_signal():
+    assert assess_registration(FakeResult(),
+                               out_of_lattice=0.3).verdict == SUSPECT
+    assert assess_registration(FakeResult(),
+                               out_of_lattice=0.9).verdict == FAILED
+    assert assess_registration(FakeResult(),
+                               out_of_lattice=0.1).verdict == OK
+
+
+def test_condition_signal():
+    assert assess_registration(FakeResult(), condition=1e3).verdict == OK
+    assert assess_registration(FakeResult(), condition=1e4).verdict == SUSPECT
+    # degradation-only by default: even a collapsed normal system never
+    # hard-fails a frame (point-to-point can still register it)
+    assert assess_registration(FakeResult(), condition=1e30).verdict == SUSPECT
+    strict = HealthThresholds(failed_condition=1e8)
+    assert assess_registration(FakeResult(), condition=1e9,
+                               thresholds=strict).verdict == FAILED
+
+
+def test_custom_thresholds():
+    strict = HealthThresholds(suspect_rmse=0.01, failed_rmse=0.02)
+    assert assess_registration(FakeResult(rmse=0.05),
+                               thresholds=strict).verdict == FAILED
+
+
+def test_worst_signal_wins():
+    h = assess_registration(FakeResult(inlier_frac=0.15, rmse=5.0))
+    assert h.verdict == FAILED
+    assert set(h.reasons) == {"inlier_frac:suspect", "rmse:failed"}
+
+
+def test_pose_jump_helper():
+    T = np.asarray(make_transform(
+        np.asarray(rotation_from_axis_angle(np.array([1.0, 0.0, 0.0]), 0.5)),
+        np.array([3.0, 4.0, 0.0])))
+    dt, dr = pose_jump(T, np.eye(4))
+    assert dt == pytest.approx(5.0)
+    assert dr == pytest.approx(0.5, abs=1e-6)
+
+
+def test_condition_of_well_observed_scene():
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(-5, 5, size=(512, 3))
+    normals = rng.normal(size=(512, 3))
+    normals /= np.linalg.norm(normals, axis=-1, keepdims=True)
+    cond = normal_equation_condition(plane_normal_matrix(pts, normals))
+    assert cond < 1e3
+
+
+def test_condition_of_planar_scene_is_degenerate():
+    rng = np.random.default_rng(1)
+    pts = rng.uniform(-5, 5, size=(512, 3))
+    pts[:, 2] = 0.0                       # flat ground, normals all +z
+    normals = np.tile(np.array([0.0, 0.0, 1.0]), (512, 1))
+    cond = normal_equation_condition(plane_normal_matrix(pts, normals))
+    assert cond > 1e6                     # x/y translation + yaw unobserved
+
+
+def test_plane_normal_matrix_respects_valid_mask():
+    rng = np.random.default_rng(2)
+    pts = rng.normal(size=(64, 3))
+    normals = rng.normal(size=(64, 3))
+    valid = np.zeros(64, bool)
+    valid[:16] = True
+    A = plane_normal_matrix(pts, normals, valid)
+    A_ref = plane_normal_matrix(pts[:16], normals[:16])
+    np.testing.assert_allclose(A, A_ref, rtol=1e-12)

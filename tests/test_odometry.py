@@ -1,0 +1,258 @@
+"""Streaming odometry: recovery cascade tiers, velocity decay, quarantine.
+
+The cascade tests script the engines (ICPResult-shaped fakes) so each
+tier's selection logic is exercised in isolation, deterministically, and
+without paying registration time; one end-to-end test runs the real stack
+on a clean stream to pin the no-fault behaviour (everything tier 0).
+"""
+import numpy as np
+
+import repro.core.odometry as odometry
+from repro.core.health import FAILED, OK, SUSPECT
+from repro.core.odometry import (OdometryConfig, OdometryPipeline,
+                                 _decay_toward_identity)
+from repro.data.pointcloud import SceneConfig, sequence_scans
+from repro.data.submap import SubmapParams
+
+TEST_SCENE = SceneConfig(n_ground=800, n_walls=600, n_poles=150,
+                         n_clutter=150, extent=15.0, sensor_range=20.0)
+TEST_SUBMAP = SubmapParams(voxel_size=0.75, capacity=4096,
+                           dims=(64, 64, 24), evict_radius=20.0)
+
+
+def _result(T=None, rmse=0.05, inlier_frac=0.9, degenerate=False):
+    class R:
+        pass
+    r = R()
+    r.T = np.eye(4, dtype=np.float32) if T is None else T
+    r.rmse = rmse
+    r.inlier_frac = inlier_frac
+    r.degenerate = degenerate
+    r.iterations = 5
+    r.converged = True
+    return r
+
+
+OK_RESULT = dict(rmse=0.05, inlier_frac=0.9, degenerate=False)
+BAD_RESULT = dict(rmse=float("inf"), inlier_frac=0.0, degenerate=True)
+SUS_RESULT = dict(rmse=0.8, inlier_frac=0.3, degenerate=False)
+
+
+class ScriptedEngine:
+    """Returns the scripted results in order; repeats the last one."""
+
+    def __init__(self, *specs):
+        self.specs = list(specs)
+        self.calls = 0
+
+    def register(self, *args, **kwargs):
+        spec = self.specs[min(self.calls, len(self.specs) - 1)]
+        self.calls += 1
+        return _result(**spec)
+
+
+def _scan(n=64, seed=0):
+    return np.asarray(np.random.default_rng(seed).uniform(-5, 5, (n, 3)),
+                      np.float32)
+
+
+def _pipe(monkeypatch, primary_specs, tier_engines, **cfg_kwargs):
+    """Pipeline whose primary engine and per-tier engines are scripted.
+
+    ``tier_engines`` maps the get_engine kind ("pyramid"/"xla") to a
+    ScriptedEngine; the cascade's ``get_engine`` lookups are intercepted.
+    """
+    cfg = OdometryConfig(submap=TEST_SUBMAP, warmup_frames=1, **cfg_kwargs)
+    pipe = OdometryPipeline(cfg)
+    pipe.engine = ScriptedEngine(*primary_specs)
+    monkeypatch.setattr(odometry, "get_engine",
+                        lambda kind, **kw: tier_engines[kind])
+    return pipe
+
+
+def _bootstrap(pipe):
+    pipe.process(_scan(seed=100))        # frame 0: map seed, no registration
+
+
+# -- cascade tiers ---------------------------------------------------------
+
+def test_clean_frame_stays_tier0(monkeypatch):
+    pipe = _pipe(monkeypatch, [OK_RESULT], {})
+    _bootstrap(pipe)
+    _, diag = pipe.process(_scan(seed=1))
+    assert diag.recovery_tier == 0
+    assert diag.health == OK
+    assert diag.accepted and not diag.quarantined
+    assert pipe.recovery_count == 0
+
+
+def test_tier1_widen_recovers(monkeypatch):
+    widen = ScriptedEngine(OK_RESULT)
+    pipe = _pipe(monkeypatch, [BAD_RESULT], {"pyramid": widen},
+                 recovery_tiers=("widen",))
+    _bootstrap(pipe)
+    _, diag = pipe.process(_scan(seed=1))
+    assert diag.recovery_tier == 1
+    assert diag.health == OK
+    assert diag.accepted
+    assert widen.calls == 1
+    assert pipe.recovery_count == 1
+
+
+def test_tier2_fallback_recovers(monkeypatch):
+    fallback = ScriptedEngine(OK_RESULT)
+    pipe = _pipe(monkeypatch, [BAD_RESULT], {"xla": fallback},
+                 recovery_tiers=("fallback",))
+    _bootstrap(pipe)
+    _, diag = pipe.process(_scan(seed=1))
+    assert diag.recovery_tier == 1
+    assert diag.accepted
+    assert fallback.calls == 1
+
+
+def test_tier3_wide_basin_recovers(monkeypatch):
+    wide = ScriptedEngine(OK_RESULT)
+    pipe = _pipe(monkeypatch, [BAD_RESULT], {"pyramid": wide},
+                 recovery_tiers=("wide_basin",))
+    _bootstrap(pipe)
+    _, diag = pipe.process(_scan(seed=1))
+    assert diag.recovery_tier == 1
+    assert diag.accepted
+
+
+def test_cascade_stops_at_first_ok_tier(monkeypatch):
+    widen = ScriptedEngine(OK_RESULT)
+    never = ScriptedEngine(OK_RESULT)
+    pipe = _pipe(monkeypatch, [BAD_RESULT],
+                 {"pyramid": widen, "xla": never})
+    _bootstrap(pipe)
+    _, diag = pipe.process(_scan(seed=1))
+    assert diag.recovery_tier == 1       # widen (pyramid) wins first
+    assert never.calls == 0              # later tiers never ran
+
+
+def test_least_bad_suspect_accepted_when_no_tier_is_ok(monkeypatch):
+    # all tiers SUSPECT with one tripped signal each; ties prefer the
+    # earliest tier (never compare inlier mass across different gates)
+    shared = ScriptedEngine(SUS_RESULT,                          # widen
+                            dict(SUS_RESULT, inlier_frac=0.5))   # wide_basin
+    xla = ScriptedEngine(SUS_RESULT)
+    pipe = _pipe(monkeypatch, [BAD_RESULT],
+                 {"pyramid": shared, "xla": xla})
+    _bootstrap(pipe)
+    inserted_before = pipe.submap.frames_inserted
+    _, diag = pipe.process(_scan(seed=1))
+    assert diag.health == SUSPECT
+    assert diag.accepted                 # pose is output...
+    assert diag.quarantined              # ...but the scan is not fused
+    assert diag.recovery_tier == 1       # earliest suspect wins the tie
+    assert pipe.submap.frames_inserted == inserted_before
+
+
+def test_all_failed_coasts_and_quarantines(monkeypatch):
+    bad = ScriptedEngine(BAD_RESULT)
+    pipe = _pipe(monkeypatch, [BAD_RESULT], {"pyramid": bad, "xla": bad})
+    _bootstrap(pipe)
+    inserted_before = pipe.submap.frames_inserted
+    pose, diag = pipe.process(_scan(seed=1))
+    assert diag.recovery_tier == len(pipe.config.recovery_tiers) + 1
+    assert diag.quarantined and not diag.accepted
+    assert diag.health == FAILED
+    assert pipe.submap.frames_inserted == inserted_before  # not fused
+    assert pipe.quarantined_count == 1
+    np.testing.assert_array_equal(pose, pipe.poses[-1])
+
+
+def test_recovery_off_keeps_legacy_guard(monkeypatch):
+    pipe = _pipe(monkeypatch, [BAD_RESULT], {}, recovery=False)
+    _bootstrap(pipe)
+    _, diag = pipe.process(_scan(seed=1))
+    assert diag.recovery_tier == 0       # no tiers ran
+    assert not diag.accepted             # legacy degenerate rejection
+    assert pipe.engine.calls == 1
+
+
+def test_sticky_counters_accumulate(monkeypatch):
+    widen = ScriptedEngine(OK_RESULT)
+    pipe = _pipe(monkeypatch, [BAD_RESULT, BAD_RESULT, OK_RESULT],
+                 {"pyramid": widen, "xla": widen})
+    _bootstrap(pipe)
+    for s in (1, 2, 3):
+        pipe.process(_scan(seed=s))
+    assert pipe.recovery_count == 2
+    assert pipe.tier_counts()[1] == 2
+    assert pipe.health_counts()[OK] >= 3
+
+
+# -- velocity decay (satellite bugfix) ------------------------------------
+
+def test_decay_toward_identity():
+    T = np.eye(4)
+    T[:3, 3] = [2.0, 0.0, 0.0]
+    D = _decay_toward_identity(T, 0.5)
+    np.testing.assert_allclose(D[:3, 3], [1.0, 0.0, 0.0], atol=1e-6)
+    np.testing.assert_allclose(D[:3, :3], np.eye(3), atol=1e-6)
+    np.testing.assert_allclose(_decay_toward_identity(np.eye(4), 0.5),
+                               np.eye(4), atol=1e-7)
+
+
+def test_dropout_burst_decays_velocity(monkeypatch):
+    """The failing-before regression: a 3-frame dropout burst must coast
+    at *decaying* speed. The old pipeline re-derived velocity from the
+    last two (coasted) poses, so it extrapolated at full speed forever."""
+    def moved(x):
+        T = np.eye(4, dtype=np.float32)
+        T[0, 3] = x
+        return dict(OK_RESULT, T=T)
+
+    pipe = _pipe(monkeypatch, [moved(1.0), moved(2.0)], {})
+    _bootstrap(pipe)
+    pipe.process(_scan(seed=1))          # pose x=1 -> velocity 1 m/frame
+    pipe.process(_scan(seed=2))          # pose x=2
+    empty = np.full((32, 3), np.nan, np.float32)   # 3-frame sensor dropout
+    xs = []
+    for s in (3, 4, 5):
+        pose, diag = pipe.process(empty)
+        assert diag.quarantined and diag.health == FAILED
+        xs.append(float(pose[0, 3]))
+    # the first coast extrapolates at the last measured speed; every
+    # further coast bleeds it by velocity_decay=0.5 — steps 1.0, 0.5,
+    # 0.25, NOT the old 1.0, 1.0, 1.0 runaway
+    np.testing.assert_allclose(xs, [3.0, 3.5, 3.75], atol=1e-5)
+
+
+def test_dropped_frame_skips_registration(monkeypatch):
+    pipe = _pipe(monkeypatch, [OK_RESULT], {})
+    _bootstrap(pipe)
+    pipe.process(_scan(seed=1))
+    calls_before = pipe.engine.calls
+    _, diag = pipe.process(np.zeros((16, 3), np.float32),
+                           valid=np.zeros(16, bool))
+    assert pipe.engine.calls == calls_before   # no registration spent
+    assert diag.quarantined and diag.iterations == 0
+
+
+# -- sensor-boundary scrub -------------------------------------------------
+
+def test_nan_scan_rows_scrubbed_at_boundary(monkeypatch):
+    pipe = _pipe(monkeypatch, [OK_RESULT], {})
+    _bootstrap(pipe)
+    scan = _scan(seed=1)
+    scan[5] = np.nan
+    scan[9, 1] = np.inf
+    pose, diag = pipe.process(scan)
+    assert np.all(np.isfinite(pose))
+    assert diag.accepted
+
+
+# -- end-to-end on the real stack -----------------------------------------
+
+def test_clean_stream_real_engine_all_tier0():
+    scans = sequence_scans(2, 6, TEST_SCENE)
+    pipe = OdometryPipeline(OdometryConfig(engine="xla", submap=TEST_SUBMAP,
+                                           scan_budget=2048))
+    poses, diags = pipe.run(scans)
+    assert np.all(np.isfinite(poses))
+    assert all(d.recovery_tier == 0 for d in diags)
+    assert all(d.accepted for d in diags)
+    assert pipe.quarantined_count == 0

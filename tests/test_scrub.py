@@ -1,0 +1,107 @@
+"""NaN/Inf scrubbing at the registration boundary (satellite bugfix).
+
+Before the scrub, a single NaN row poisoned the whole solve: NaN distances
+propagate through the matmul distance expansion into every argmin, NaN
+coordinates poison the grid's ``min``-derived origin and ``floor`` cell
+coords, and the fused kernel's moment sums go NaN in one step. These tests
+encode the failing-before behaviour: corrupt rows must be dropped at the
+boundary, leaving the recovered transform (bit-)unchanged vs. masking the
+same rows by hand.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ICPParams, get_engine, icp, icp_batch,
+                        scrub_nonfinite, transform_points)
+from repro.core.transform import random_rigid_transform
+
+
+def _scene(seed, n=512):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    target = jax.random.uniform(k1, (n, 3), minval=-8.0, maxval=8.0)
+    T_gt = random_rigid_transform(k2, max_angle=0.1, max_translation=0.3)
+    src = transform_points(jnp.linalg.inv(T_gt), target)
+    src = src + 0.005 * jax.random.normal(k3, src.shape)
+    return src, target, T_gt
+
+
+def _poison(points, rows, value=jnp.nan):
+    return points.at[jnp.asarray(rows)].set(value)
+
+
+def test_scrub_nonfinite_masks_and_sentinels():
+    pts = jnp.array([[0.0, 0.0, 0.0],
+                     [jnp.nan, 1.0, 1.0],
+                     [1.0, jnp.inf, 1.0],
+                     [2.0, 2.0, 2.0]])
+    out, valid = scrub_nonfinite(pts)
+    np.testing.assert_array_equal(np.asarray(valid),
+                                  [True, False, False, True])
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_array_equal(np.asarray(out[0]), [0.0, 0.0, 0.0])
+
+
+def test_scrub_composes_with_existing_mask():
+    pts = jnp.array([[0.0, 0.0, 0.0], [jnp.nan, 0.0, 0.0],
+                     [1.0, 1.0, 1.0]])
+    valid = jnp.array([True, True, False])
+    _, v = scrub_nonfinite(pts, valid)
+    np.testing.assert_array_equal(np.asarray(v), [True, False, False])
+
+
+def test_scrub_is_identity_on_clean_input():
+    """Bit-exactness guard: clean inputs must be untouched, so the scrub
+    cannot move any committed benchmark baseline."""
+    pts = jax.random.normal(jax.random.PRNGKey(0), (256, 3))
+    out, valid = scrub_nonfinite(pts)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(pts))
+    assert bool(jnp.all(valid))
+
+
+def test_single_nan_row_does_not_change_icp_transform():
+    """The headline regression: one NaN row in the source must recover the
+    same transform as explicitly masking that row (failing before the
+    boundary scrub — the solve returned an all-NaN pose)."""
+    src, target, _ = _scene(0)
+    params = ICPParams(max_iterations=30, chunk=256)
+    poisoned = _poison(src, [7])
+    mask = jnp.ones(src.shape[0], bool).at[7].set(False)
+
+    res_poisoned = icp(poisoned, target, params)
+    res_masked = icp(src, target, params, src_valid=mask)
+
+    assert np.all(np.isfinite(np.asarray(res_poisoned.T)))
+    np.testing.assert_allclose(np.asarray(res_poisoned.T),
+                               np.asarray(res_masked.T), atol=1e-6)
+
+
+def test_nan_rows_in_target_are_scrubbed():
+    src, target, T_gt = _scene(1)
+    poisoned = _poison(target, [3, 100, 400], jnp.inf)
+    res = icp(src, poisoned, ICPParams(max_iterations=30, chunk=256))
+    assert np.all(np.isfinite(np.asarray(res.T)))
+    np.testing.assert_allclose(np.asarray(res.T), np.asarray(T_gt),
+                               atol=0.05)
+
+
+def test_icp_batch_scrubs_per_lane():
+    src0, dst0, _ = _scene(2, n=256)
+    src1, dst1, _ = _scene(3, n=256)
+    srcs = jnp.stack([_poison(src0, [0]), src1])
+    dsts = jnp.stack([dst0, _poison(dst1, [5], jnp.inf)])
+    res = icp_batch(srcs, dsts, ICPParams(max_iterations=20, chunk=256))
+    assert np.all(np.isfinite(np.asarray(res.T)))
+
+
+@pytest.mark.parametrize("kind", ["xla", "pallas", "pyramid"])
+def test_engines_survive_nan_rows(kind):
+    src, target, T_gt = _scene(4)
+    poisoned = _poison(src, [11, 12])
+    engine = get_engine(kind)
+    res = engine.register(poisoned, target,
+                          ICPParams(max_iterations=30, chunk=256))
+    T = np.asarray(res.T)
+    assert np.all(np.isfinite(T))
+    np.testing.assert_allclose(T, np.asarray(T_gt), atol=0.05)
