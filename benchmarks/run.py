@@ -17,6 +17,9 @@
                                          writes BENCH_odometry.json)
   robustness -> robustness           (fault matrix x recovery cascade
                                          ON/OFF; writes BENCH_robustness.json)
+  service -> service_throughput      (multi-stream fleet rounds vs the
+                                         sequential per-stream loop;
+                                         writes BENCH_service.json)
 
 ``--quick`` runs every suite in smoke mode (reduced scenes, 2 frames,
 fewer iterations) so CI can exercise all entry points in seconds.
@@ -31,7 +34,7 @@ from benchmarks import (convergence, kernel_resources, nn_sweep,
                         odometry_drift, power_efficiency,
                         registration_accuracy, registration_latency,
                         registration_throughput, robustness,
-                        roofline_report)
+                        roofline_report, service_throughput)
 from benchmarks.common import QUICK_SCENE, emit
 
 SUITES = {
@@ -45,6 +48,7 @@ SUITES = {
     "convergence": convergence.run,
     "odometry": odometry_drift.run,
     "robustness": robustness.run,
+    "service": service_throughput.run,
 }
 
 # Smoke-mode kwargs per suite (reduced scenes, 2 frames, short loops).
@@ -54,6 +58,7 @@ QUICK_KWARGS = {
     "table4": dict(n_seqs=2, samples=512, iters=10, scene=QUICK_SCENE),
     "power": dict(n_seqs=2, samples=512, iters=10, scene=QUICK_SCENE),
     "throughput": dict(quick=True),
+    "service": dict(quick=True),
 }
 # Suites whose smoke mode is a different entry point, not just kwargs.
 QUICK_SUITES = {"nn_sweep": nn_sweep.run_quick,

@@ -1,0 +1,223 @@
+"""Multi-stream service throughput: fleet rounds vs a sequential loop.
+
+The paper's headline number is runtime-weighted across a workload mix
+(§IV) — a shared-accelerator claim, not a single-frame one. This
+benchmark makes the repo's version of that claim measurable: N odometry
+streams through :class:`~repro.serve.registration_service.
+RegistrationService` (one compiled fleet round per frame wave) against
+the sequential alternative — N standalone per-stream
+``OdometryPipeline`` loops fed bit-identical staged frames.
+
+What the service buys on this 1-core CPU container is *host overhead
+amortization*: the sequential loop pays per-frame eager dispatches
+(scrub + downsample + lattice probe), several ``float()`` sync points,
+and a per-frame fuse — roughly a fixed cost per frame regardless of
+registration size. A fleet round folds all of that into three batched
+executables and one bulk fetch, so the bench sizes registration small
+(the streaming regime: warm-started frames need few iterations against
+a small local submap) to expose the overhead the service removes. On a
+real accelerator the same structure removes MXU idle between streams.
+
+``transformation_epsilon=0`` pins every lane and the sequential path to
+the same fixed iteration count, so the comparison isolates execution
+shape rather than early-exit luck (same device as the throughput bench).
+
+Also recorded, because they are acceptance criteria, not vibes:
+
+  * retraces after warmup — engine trace-counter delta across the timed
+    rounds; MUST be 0 (admissions/drops/retires never change a traced
+    shape).
+  * parity — max abs pose difference between a service stream and a
+    standalone ``OdometryPipeline(svc.stream_config)`` replay of the
+    same staged frames; MUST be exactly 0.0 (see DESIGN.md §13).
+
+Writes BENCH_service.json next to the CWD for CI trend tracking
+(``--quick`` writes BENCH_service_quick.json to never clobber the
+committed baseline).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import ICPParams
+from repro.core.odometry import OdometryConfig, OdometryPipeline
+from repro.data.pointcloud import SceneConfig, sequence_scans
+from repro.data.submap import SubmapParams
+from repro.serve.registration_service import (RegistrationService,
+                                              ServiceConfig)
+
+JSON_PATH = pathlib.Path("BENCH_service.json")
+
+# Small scene: the service regime is warm-started streaming against a
+# compact local submap, where per-frame host overhead (what the service
+# amortizes) is comparable to registration compute.
+SERVICE_SCENE = SceneConfig(n_ground=800, n_walls=600, n_poles=150,
+                            n_clutter=150, extent=15.0, sensor_range=20.0)
+QUICK_SERVICE_SCENE = SceneConfig(n_ground=300, n_walls=220, n_poles=60,
+                                  n_clutter=70, extent=12.0,
+                                  sensor_range=16.0)
+
+
+def _bench_odometry(iters: int, budget: int) -> OdometryConfig:
+    """Streaming-regime odometry config shared by every path: fixed
+    iteration count (eps=0), small downsample budget, compact submap."""
+    return OdometryConfig(
+        engine="xla", engine_kwargs=(),
+        params=ICPParams(max_iterations=iters,
+                         max_correspondence_distance=1.0,
+                         transformation_epsilon=0.0, chunk=512,
+                         robust_kernel="huber", robust_scale=0.3),
+        submap=SubmapParams(voxel_size=1.5, capacity=512, dims=(32, 32, 12),
+                            evict_radius=12.0),
+        scan_voxel=1.5, scan_budget=budget, recovery=False)
+
+
+def _staged_fleet(svc: RegistrationService, n_streams: int, frames: int,
+                  scene: SceneConfig):
+    """Per-stream staged (padded, valid) frame lists — the bit-identical
+    input both the service and the sequential loops consume."""
+    fleet = {}
+    for s in range(n_streams):
+        scans = sequence_scans(s, frames, scene)
+        fleet[f"veh{s}"] = [svc.stage_scan(scan) for scan in scans]
+    return fleet
+
+
+def _run_service(cfg_svc: ServiceConfig, fleet: dict, warm: int,
+                 timed: int):
+    """Warm the fleet, then time ``timed`` rounds (submit + step + sync).
+
+    Returns (round_times_s, retraces_after_warmup)."""
+    svc = RegistrationService(cfg_svc)
+    for sid in fleet:
+        svc.admit(sid)
+    for f in range(warm):
+        for sid, staged in fleet.items():
+            svc.submit(sid, *staged[f])
+        svc.step()
+    svc.sync()
+    traces_before = svc.engine.trace_count
+    rounds = []
+    for f in range(warm, warm + timed):
+        t0 = time.perf_counter()
+        for sid, staged in fleet.items():
+            svc.submit(sid, *staged[f])
+        svc.step()
+        svc.sync()
+        rounds.append(time.perf_counter() - t0)
+    return rounds, svc.engine.trace_count - traces_before
+
+
+def _run_sequential(odo: OdometryConfig, fleet: dict, warm: int,
+                    timed: int):
+    """The baseline: one standalone per-stream pipeline each, processed
+    frame-by-frame in a host loop. Returns per-call times (s)."""
+    pipes = {sid: OdometryPipeline(odo) for sid in fleet}
+    for f in range(warm):
+        for sid, staged in fleet.items():
+            pipes[sid].process(*staged[f])
+    calls = []
+    for f in range(warm, warm + timed):
+        for sid, staged in fleet.items():
+            t0 = time.perf_counter()
+            pipes[sid].process(*staged[f])
+            calls.append(time.perf_counter() - t0)
+    return calls
+
+
+def _parity_replay(cfg_svc: ServiceConfig, fleet: dict, frames: int):
+    """Bit-exactness check: one service stream vs a standalone
+    ``OdometryPipeline(stream_config)`` on the same staged frames."""
+    svc = RegistrationService(cfg_svc)
+    sid = next(iter(fleet))
+    svc.admit(sid)
+    ref = OdometryPipeline(svc.stream_config)
+    worst = 0.0
+    for f in range(frames):
+        svc.submit(sid, *fleet[sid][f])
+        pose_svc, _ = svc.step()[sid]
+        pose_ref, _ = ref.process(*fleet[sid][f])
+        worst = max(worst, float(np.abs(np.asarray(pose_svc) -
+                                        np.asarray(pose_ref)).max()))
+    return worst
+
+
+def run(streams: tuple = (1, 2, 4, 8), frames: int = 12, warm: int = 4,
+        iters: int = 4, budget: int = 128, quick: bool = False,
+        out_json: str | None = None):
+    scene = SERVICE_SCENE
+    if quick:
+        streams, frames, warm, iters = (4,), 5, 2, 3
+        scene = QUICK_SERVICE_SCENE
+        if out_json is None:
+            # never clobber the committed baseline from smoke mode — the
+            # bench-guard diffs against it (scratch name is gitignored)
+            out_json = "BENCH_service_quick.json"
+    s_max = max(streams)
+    odo = _bench_odometry(iters, budget)
+    cfg_svc = ServiceConfig(slots=s_max, scan_capacity=2048,
+                            max_queue=warm + frames, odometry=odo)
+    probe = RegistrationService(cfg_svc)          # stage_scan padder only
+    fleet = _staged_fleet(probe, s_max, warm + frames, scene)
+
+    rows, sweep, retraces = [], {}, 0
+    for s in streams:
+        sub_fleet = dict(list(fleet.items())[:s])
+        rounds, delta = _run_service(cfg_svc, sub_fleet, warm, frames)
+        if s == s_max:
+            retraces = delta
+        fps = s * len(rounds) / sum(rounds)
+        p99 = float(np.percentile(np.asarray(rounds), 99) * 1e3)
+        sweep[s] = {"aggregate_fps": fps, "p99_frame_ms": p99}
+        rows.append((f"service/fleet_s{s}", sum(rounds) / len(rounds) /
+                     s * 1e6, f"{fps:.1f} frames/s;p99={p99:.1f}ms"))
+
+    calls = _run_sequential(odo, fleet, warm, frames)
+    seq_fps = len(calls) / sum(calls)
+    seq_p99 = float(np.percentile(np.asarray(calls), 99) * 1e3)
+    rows.append((f"service/sequential_s{s_max}",
+                 sum(calls) / len(calls) * 1e6,
+                 f"{seq_fps:.1f} frames/s;p99={seq_p99:.1f}ms"))
+
+    fps_ratio = sweep[s_max]["aggregate_fps"] / seq_fps
+    p99_ratio = sweep[s_max]["p99_frame_ms"] / seq_p99
+    parity = _parity_replay(cfg_svc, fleet, min(frames, 6))
+
+    summary = {
+        "streams": list(streams), "frames": frames, "warm": warm,
+        "iters": iters, "scan_budget": budget,
+        "sweep": {str(s): v for s, v in sweep.items()},
+        "sequential_fps": seq_fps, "sequential_p99_ms": seq_p99,
+        "aggregate_fps": sweep[s_max]["aggregate_fps"],
+        "p99_frame_ms": sweep[s_max]["p99_frame_ms"],
+        "fps_ratio": fps_ratio, "p99_latency_ratio": p99_ratio,
+        "retraces_after_warmup": retraces, "parity_max_abs": parity,
+    }
+    path = JSON_PATH if out_json is None else pathlib.Path(out_json)
+    path.write_text(json.dumps(summary, indent=2))
+
+    rows += [
+        (f"service/fps_ratio_s{s_max}", 0.0,
+         f"{fps_ratio:.2f}x sequential (must be >=2x at 8 streams)"),
+        (f"service/p99_latency_ratio_s{s_max}", 0.0,
+         f"{p99_ratio:.2f}x sequential per-frame p99"),
+        ("service/retraces_after_warmup", 0.0,
+         f"{retraces} (must be 0)"),
+        ("service/parity_max_abs", 0.0,
+         f"{parity:.1e} vs standalone pipeline (must be 0.0)"),
+    ]
+    assert retraces == 0, f"service retraced after warmup: {retraces}"
+    assert parity == 0.0, f"service/pipeline parity broke: {parity}"
+    if not quick:
+        assert fps_ratio >= 2.0, \
+            f"aggregate fps only {fps_ratio:.2f}x sequential at {s_max}"
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -97,6 +97,9 @@ class RegistrationEngine:
 
     @property
     def traces(self) -> tuple:
+        """The trace log behind :attr:`trace_count`: one ``(kind,
+        params-key, *shape-buckets)`` tuple per compilation, in order —
+        what the retrace-freedom tests diff before and after a run."""
         return tuple(self._traces)
 
     def setup(self) -> None:
@@ -357,6 +360,7 @@ class DistributedEngine(RegistrationEngine):
         return self._mesh
 
     def setup(self) -> None:
+        """Backend init hook: build the (data, model) device mesh once."""
         self._get_mesh()
 
     def _build_batch(self, params: ICPParams):
@@ -423,6 +427,85 @@ class DistributedEngine(RegistrationEngine):
         return run  # batch_fn is already jitted
 
 
+class SlotEngine(RegistrationEngine):
+    """Fixed-width slot-batch engine backing the multi-stream registration
+    service (DESIGN.md §13).
+
+    Every registration — the service's S-stream fleet step AND a lone
+    single-frame :meth:`register` call — runs through ONE jitted
+    ``vmap(icp)`` executable of exactly ``slots`` lanes. The batched
+    ``while_loop`` stops when every lane's convergence predicate is false,
+    and per-lane freeze masks (the ``vmap``-induced ``select`` on each
+    state update) keep converged or inactive lanes bit-frozen while live
+    lanes iterate. Single-frame calls embed the frame at lane 0 among
+    sentinel-masked inactive lanes (which degenerate-freeze after one
+    iteration) and slice lane 0 back out; a vmapped lane is bitwise
+    independent of lane position and of the other lanes' contents, so a
+    per-stream :class:`~repro.core.odometry.OdometryPipeline` on this
+    engine reproduces the service's poses bit-for-bit — the service
+    parity contract.
+    """
+
+    name = "slots"
+
+    def __init__(self, chunk: int = 2048, slots: int = 8):
+        super().__init__(chunk)
+        self.slots = int(slots)
+
+    def _build_batch(self, params: ICPParams):
+        nn_fn = self._nn_fn(params)
+
+        def run(src_b, dst_b, T0, sv, dv):
+            self._note_trace("batch", params, src_b.shape, dst_b.shape)
+            if T0 is None:
+                T0 = jnp.broadcast_to(jnp.eye(4, dtype=src_b.dtype),
+                                      (src_b.shape[0], 4, 4))
+
+            def one(src, dst, T0_, sv_, dv_):
+                return icp(src, dst, params, T0_, nn_fn=nn_fn,
+                           src_valid=sv_, dst_valid=dv_)
+
+            return jax.vmap(one)(src_b, dst_b, T0, sv, dv)
+
+        return jax.jit(run)
+
+    def register(self, source, target, params: ICPParams | None = None,
+                 initial_transform=None, *, src_valid=None, dst_valid=None,
+                 bucket: bool = True) -> ICPResult:
+        """Register one (N,3)/(M,3) pair through the S-lane slot
+        executable: the pair occupies lane 0, the remaining ``slots - 1``
+        lanes carry sentinel rows with all-False masks (degenerate-frozen
+        after one iteration), and lane 0 of the batched result is
+        returned. Same bucketing semantics as the base engine; crucially
+        the executable is the SAME one the service's fleet step compiles,
+        so this path never adds a trace."""
+        params = self._default_params(params)
+        src = jnp.asarray(source, dtype=jnp.float32)
+        dst = jnp.asarray(target, dtype=jnp.float32)
+        if src_valid is None and dst_valid is None and bucket:
+            n_b = bucket_size(src.shape[0])
+            m_b = bucket_size(dst.shape[0])
+            if (src.shape[0], dst.shape[0]) != (n_b, m_b):
+                src, src_valid = _pad_device(src, n_b)
+                dst, dst_valid = _pad_device(dst, m_b)
+        sv = (jnp.ones(src.shape[0], bool) if src_valid is None
+              else jnp.asarray(src_valid, bool))
+        dv = (jnp.ones(dst.shape[0], bool) if dst_valid is None
+              else jnp.asarray(dst_valid, bool))
+        T0 = (jnp.eye(4, dtype=jnp.float32) if initial_transform is None
+              else jnp.asarray(initial_transform, jnp.float32))
+        lane = jnp.arange(self.slots) == 0
+        sentinel = jnp.asarray(PAD_SENTINEL, jnp.float32)
+        src_b = jnp.where(lane[:, None, None], src[None], sentinel)
+        dst_b = jnp.where(lane[:, None, None], dst[None], sentinel)
+        sv_b = jnp.logical_and(lane[:, None], sv[None])
+        dv_b = jnp.logical_and(lane[:, None], dv[None])
+        T0_b = jnp.broadcast_to(T0[None], (self.slots, 4, 4))
+        fn = self._executable("batch", params)
+        res = fn(src_b, dst_b, T0_b, sv_b, dv_b)
+        return jax.tree_util.tree_map(lambda x: x[0], res)
+
+
 class CallableEngine(RegistrationEngine):
     """Adapter for a user-supplied ``nn_fn(src, dst) -> (d2, idx)``."""
 
@@ -449,6 +532,8 @@ def register_engine(name: str, factory: Callable[..., RegistrationEngine]):
 
 
 def available_engines() -> tuple[str, ...]:
+    """Registered engine names, sorted — the valid ``get_engine`` specs
+    (and the CLI ``--engine`` choices)."""
     return tuple(sorted(_ENGINES))
 
 
@@ -488,6 +573,7 @@ def get_engine(spec, **kwargs) -> RegistrationEngine:
 register_engine("xla", XLAEngine)
 register_engine("pallas", PallasEngine)
 register_engine("distributed", DistributedEngine)
+register_engine("slots", SlotEngine)
 
 # Imported for its side effect: registers the "pyramid" engine. Lives in
 # its own module (it pulls in the voxel/grid-NN stack); bottom import keeps

@@ -156,6 +156,45 @@ class FrameDiagnostics(NamedTuple):
     quarantined: bool = False   # scan withheld from the map
 
 
+# Frame classification out of prepare_frame: which half of the frame
+# lifecycle (register / bootstrap-the-map / coast-an-empty-scan) the
+# completion step must run. Strings, not an enum, so diagnostics and the
+# service's per-lane bookkeeping stay greppable.
+KIND_BOOTSTRAP = "bootstrap"
+KIND_EMPTY = "empty"
+KIND_REGISTER = "register"
+
+
+class PreparedFrame(NamedTuple):
+    """Device-side half of one frame, produced by
+    :meth:`OdometryPipeline.prepare_frame`: the scrubbed + voxel-
+    downsampled scan, its validity mask, and the host-side classification
+    (bootstrap / empty / register) plus warm-start prediction. The
+    registration service batches many of these through one executable;
+    :meth:`OdometryPipeline.complete_frame` consumes one plus its
+    registration result."""
+
+    frame: int
+    kind: str               # KIND_BOOTSTRAP | KIND_EMPTY | KIND_REGISTER
+    src: jax.Array          # (scan_budget, 3) downsampled sensor-frame scan
+    sv: jax.Array           # (scan_budget,) validity mask
+    T0: np.ndarray          # warm-start prediction (identity off-register)
+    reacquire: bool = False     # first frame after a coast streak
+    skip_primary: bool = False  # reacquire + tiers: ladder only, no primary
+
+
+class FuseRequest(NamedTuple):
+    """Deferred map-fusion work order returned by
+    :meth:`OdometryPipeline.complete_frame` under ``defer_fuse=True``: the
+    accepted frame's downsampled scan (sensor frame), mask, and output
+    pose. The service executes these as ONE vmapped submap fuse across
+    all streams instead of per-stream inserts."""
+
+    src: jax.Array
+    sv: jax.Array
+    pose: np.ndarray
+
+
 @functools.partial(jax.jit, static_argnames=("nparams",))
 def _scan_plane_system(src: jax.Array, sv: jax.Array,
                        nparams: NormalParams) -> jax.Array:
@@ -243,19 +282,23 @@ class OdometryPipeline:
         return float(jnp.sum(jnp.logical_and(sv, ~inb)) / n_valid)
 
     def _assess(self, res, T0, src, sv, condition: float | None = None,
-                trust_prediction: bool = True) -> RegistrationHealth:
+                trust_prediction: bool = True,
+                out_of_lattice: float | None = None) -> RegistrationHealth:
         # The jump signal needs a real prediction: with <2 poses (or the
         # motion model off) T0 is just the last pose, and "jump" would
         # penalize genuine ego motion. Reacquire mode also drops it —
         # after a coast the prediction is exactly what is no longer
         # trusted, and a *correct* re-acquisition necessarily jumps away
-        # from it.
+        # from it. ``out_of_lattice`` lets the service supply the probe
+        # from its batched (vmapped) evaluation; per-frame callers leave
+        # it None and pay the eager probe here.
         predicted = (T0 if trust_prediction and self.config.motion_model
                      and len(self.poses) >= 2 else None)
+        if out_of_lattice is None:
+            out_of_lattice = self._out_of_lattice_frac(res, src, sv)
         return assess_registration(
             res, predicted=predicted, thresholds=self.config.thresholds,
-            out_of_lattice=self._out_of_lattice_frac(res, src, sv),
-            condition=condition)
+            out_of_lattice=out_of_lattice, condition=condition)
 
     def _scan_condition(self, src, sv) -> float | None:
         """Observability of the scan itself (pose-independent, once per
@@ -295,7 +338,8 @@ class OdometryPipeline:
                                src_valid=sv, dst_valid=map_valid)
 
     def _cascade(self, src, sv, map_pts, map_valid, T0,
-                 condition: float | None = None, reacquire: bool = False):
+                 condition: float | None = None, reacquire: bool = False,
+                 primary=None, out_of_lattice: float | None = None):
         """Primary attempt + bounded retry ladder. Returns
         (result_or_None, health, tier): ``None`` result means coast.
 
@@ -305,14 +349,22 @@ class OdometryPipeline:
         alias that *reads* healthy (small jump vs. the equally-stale
         prediction, ordinary rmse). The coarse-first retry schedules are
         built for exactly this uncertainty, so the ladder starts there.
+
+        ``primary`` (with its batched ``out_of_lattice`` probe) is the
+        service path: the tier-0 registration already ran inside the
+        fleet-wide executable, so the ladder only spends per-stream
+        registrations when that result's health gates it here.
         """
         cfg = self.config
         attempts = []
         if not (reacquire and cfg.recovery_tiers):
-            res = self.engine.register(src, map_pts, cfg.params,
-                                       initial_transform=T0,
-                                       src_valid=sv, dst_valid=map_valid)
-            health = self._assess(res, T0, src, sv, condition)
+            res = primary
+            if res is None:
+                res = self.engine.register(src, map_pts, cfg.params,
+                                           initial_transform=T0,
+                                           src_valid=sv, dst_valid=map_valid)
+            health = self._assess(res, T0, src, sv, condition,
+                                  out_of_lattice=out_of_lattice)
             if health.ok or not cfg.recovery:
                 return res, health, 0
             attempts.append((0, res, health))
@@ -338,31 +390,78 @@ class OdometryPipeline:
         return None, attempts[0][2], len(cfg.recovery_tiers) + 1
 
     # -- streaming API -----------------------------------------------------
-    def process(self, scan, valid=None) -> tuple[np.ndarray, FrameDiagnostics]:
-        """Ingest one sensor-frame scan; returns (pose, diagnostics).
+    def prepare_frame(self, scan, valid=None,
+                      downsampled=None) -> PreparedFrame:
+        """Device-side frame ingest + host classification, without the
+        registration: scrub NaN/Inf rows, voxel-downsample to the scan
+        budget, predict the warm start, and decide whether this frame
+        bootstraps the map, coasts (no usable returns), or registers.
 
-        ``valid`` is an optional (N,) row mask (collate conventions).
-        NaN/Inf rows are scrubbed here, before even the voxel downsample's
-        min-derived lattice origin can see them.
+        ``downsampled=(src, sv, n_valid)`` skips the scrub/downsample —
+        the service path, which runs that stage as one vmapped executable
+        across every stream and hands each pipeline its own lane. The
+        lane must be bit-identical to what this method would compute
+        (guaranteed: a vmapped lane of the same program is).
         """
         cfg = self.config
-        pts = jnp.asarray(scan, jnp.float32)
-        if valid is not None:
-            valid = jnp.asarray(valid, bool)
-        pts, valid = scrub_nonfinite(pts, valid)
-        src, sv = voxel_downsample(pts, cfg.scan_voxel,
-                                   max_points=cfg.scan_budget, valid=valid)
+        if downsampled is None:
+            pts = jnp.asarray(scan, jnp.float32)
+            if valid is not None:
+                valid = jnp.asarray(valid, bool)
+            pts, valid = scrub_nonfinite(pts, valid)
+            src, sv = voxel_downsample(pts, cfg.scan_voxel,
+                                       max_points=cfg.scan_budget,
+                                       valid=valid)
+            n_valid = int(jnp.sum(sv))
+        else:
+            src, sv, n_valid = downsampled
         frame = len(self.poses)
         if frame == 0:
+            return PreparedFrame(frame=frame, kind=KIND_BOOTSTRAP, src=src,
+                                 sv=sv, T0=np.eye(4, dtype=np.float32))
+        if n_valid == 0:
+            return PreparedFrame(frame=frame, kind=KIND_EMPTY, src=src,
+                                 sv=sv, T0=np.asarray(self._predict(),
+                                                      np.float32))
+        reacquire = (cfg.recovery and frame >= cfg.warmup_frames
+                     and self._coast_streak > 0)
+        return PreparedFrame(frame=frame, kind=KIND_REGISTER, src=src,
+                             sv=sv, T0=np.asarray(self._predict(),
+                                                  np.float32),
+                             reacquire=reacquire,
+                             skip_primary=(reacquire
+                                           and bool(cfg.recovery_tiers)))
+
+    def complete_frame(self, prep: PreparedFrame, result=None, *,
+                       lattice_frac: float | None = None,
+                       defer_fuse: bool = False):
+        """Host-side frame completion: health assessment, recovery
+        cascade, accept/quarantine bookkeeping, map fusion. Returns
+        ``(pose, diagnostics, fuse_request)``.
+
+        ``result`` is the primary registration's ICPResult for
+        ``KIND_REGISTER`` frames (None when ``prep.skip_primary`` — the
+        cascade ladder runs without a tier 0). ``lattice_frac``
+        optionally supplies the out-of-lattice probe for that primary
+        result (the service's batched probe). With ``defer_fuse=True`` an
+        accepted fusable frame returns a :class:`FuseRequest` instead of
+        inserting into the submap — the caller owns the fuse and must
+        then patch ``diag.map_occupancy`` (reported here as the pre-fuse
+        value).
+        """
+        cfg = self.config
+        frame, src, sv, T0 = prep.frame, prep.src, prep.sv, prep.T0
+        fuse_req = None
+        if prep.kind == KIND_BOOTSTRAP:
             pose = np.eye(4, dtype=np.float32)
             self.submap.insert(src, center=np.zeros(3, np.float32), valid=sv)
             diag = FrameDiagnostics(frame=0, iterations=0, inlier_frac=1.0,
                                     rmse=0.0, degenerate=False, accepted=True,
                                     map_occupancy=self.submap.occupancy())
-        elif int(jnp.sum(sv)) == 0:
+        elif prep.kind == KIND_EMPTY:
             # dropped frame (no usable returns): coast without spending a
             # registration, quarantine, decay the velocity
-            pose = np.asarray(self._predict(), np.float32)
+            pose = np.asarray(T0, np.float32)
             self._velocity = _decay_toward_identity(self._velocity,
                                                     cfg.velocity_decay)
             self._coast_streak += 1
@@ -377,21 +476,19 @@ class OdometryPipeline:
                                     health=FAILED, recovery_tier=tier,
                                     quarantined=True)
         else:
-            T0 = self._predict()
-            map_pts, map_valid = self.submap.target()
-            reacquire = (cfg.recovery and frame >= cfg.warmup_frames
-                         and self._coast_streak > 0)
+            reacquire = prep.reacquire
             if cfg.recovery and frame >= cfg.warmup_frames:
                 condition = self._scan_condition(src, sv)
+                map_pts, map_valid = self.submap.target()
                 res, health, tier = self._cascade(
                     src, sv, map_pts, map_valid, T0, condition,
-                    reacquire=reacquire)
+                    reacquire=reacquire, primary=result,
+                    out_of_lattice=lattice_frac)
                 accepted = res is not None
             else:
-                res = self.engine.register(src, map_pts, cfg.params,
-                                           initial_transform=T0,
-                                           src_valid=sv, dst_valid=map_valid)
-                health = self._assess(res, T0, src, sv)
+                res = result
+                health = self._assess(res, T0, src, sv,
+                                      out_of_lattice=lattice_frac)
                 tier = 0
                 accepted = (not bool(res.degenerate)
                             and float(res.inlier_frac)
@@ -413,9 +510,12 @@ class OdometryPipeline:
                 # delta is correction + motion entangled — the decayed
                 # coast velocity is the better motion estimate; keep it.
                 if fused:
-                    self.submap.insert(
-                        transform_points(jnp.asarray(pose), src),
-                        center=pose[:3, 3], valid=sv)
+                    if defer_fuse:
+                        fuse_req = FuseRequest(src=src, sv=sv, pose=pose)
+                    else:
+                        self.submap.insert(
+                            transform_points(jnp.asarray(pose), src),
+                            center=pose[:3, 3], valid=sv)
             else:
                 pose = np.asarray(T0, np.float32)
                 # decay the motion model: coasting frames must bleed speed
@@ -436,12 +536,44 @@ class OdometryPipeline:
                 degenerate=(bool(last.degenerate)
                             if last is not None else True),
                 accepted=accepted,
-                map_occupancy=self.submap.occupancy(),
+                map_occupancy=(-1.0 if fuse_req is not None
+                               else self.submap.occupancy()),
                 health=health.verdict, recovery_tier=tier,
                 pose_jump=health.pose_jump_m,
                 quarantined=not fused)
         self.poses.append(pose)
         self.diagnostics.append(diag)
+        return pose, diag, fuse_req
+
+    def amend_diagnostics(self, frame: int,
+                          **fields) -> FrameDiagnostics:
+        """Patch the stored diagnostics for ``frame`` (service use: fill
+        ``map_occupancy`` after a deferred batched fuse). Returns the
+        amended record."""
+        idx = next(i for i, d in enumerate(self.diagnostics)
+                   if d.frame == frame)
+        self.diagnostics[idx] = self.diagnostics[idx]._replace(**fields)
+        return self.diagnostics[idx]
+
+    def process(self, scan, valid=None) -> tuple[np.ndarray, FrameDiagnostics]:
+        """Ingest one sensor-frame scan; returns (pose, diagnostics).
+
+        ``valid`` is an optional (N,) row mask (collate conventions).
+        NaN/Inf rows are scrubbed here, before even the voxel downsample's
+        min-derived lattice origin can see them. This is
+        :meth:`prepare_frame` + primary registration +
+        :meth:`complete_frame` in sequence — the single-stream spelling of
+        the same lifecycle the registration service runs batched.
+        """
+        prep = self.prepare_frame(scan, valid)
+        res = None
+        if prep.kind == KIND_REGISTER and not prep.skip_primary:
+            map_pts, map_valid = self.submap.target()
+            res = self.engine.register(prep.src, map_pts, self.config.params,
+                                       initial_transform=prep.T0,
+                                       src_valid=prep.sv,
+                                       dst_valid=map_valid)
+        pose, diag, _ = self.complete_frame(prep, res)
         return pose, diag
 
     def run(self, scans) -> tuple[np.ndarray, list[FrameDiagnostics]]:

@@ -1,7 +1,12 @@
-"""Batched serving driver.
+"""Batched LM serving driver (legacy lockstep decode path).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
         --batch 4 --prompt-len 32 --gen 32
+
+Drives :class:`repro.serve.engine.Engine` — the LM-zoo decode loop, not
+the paper's workload. The point-cloud fleet service (continuous
+batching over odometry streams) is driven by
+``python -m repro.launch.registration --mode serve`` instead.
 """
 from __future__ import annotations
 

@@ -1,1 +1,4 @@
-"""Serving substrate: batched generate engine + modality frontends."""
+"""Serving layer: the multi-stream registration service (the paper's
+workload — ``registration_service``, DESIGN.md §13), the legacy lockstep
+LM generate engine (``engine``), and the VQ modality frontends
+(``modality``)."""

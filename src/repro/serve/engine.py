@@ -1,9 +1,16 @@
-"""Batched serving engine: prefill + decode loop with a persistent KV cache.
+"""LEGACY LM-decode path: batched generate with a persistent KV cache.
 
-Simplification (documented): the batch decodes in lockstep (uniform
-positions) — the standard benchmark-serving shape (decode_32k cell). A
-continuous-batching scheduler would sit one level above this engine and is
-out of scope for the paper's workload.
+This is the seed-era *language-model* serving engine — prefill + decode
+in lockstep (uniform positions), the standard benchmark-serving shape
+(decode_32k cell). It predates the repo's actual serving layer and is
+kept for the LM-zoo archs only.
+
+For the paper's workload — point-cloud registration — continuous
+batching is NOT out of scope anymore: it lives in
+:mod:`repro.serve.registration_service` (DESIGN.md §13), where N
+odometry streams join/retire mid-flight through fixed-shape fleet
+rounds. New serving work belongs there; this module stays the lockstep
+LM reference.
 """
 from __future__ import annotations
 
@@ -15,6 +22,12 @@ from repro.models import lm
 
 
 class Engine:
+    """Lockstep LM generate engine: one jitted decode step (donated KV
+    cache) driven by a host loop at uniform batch positions. Streams
+    cannot join or leave mid-generation — for that (on the registration
+    workload) see :class:`repro.serve.registration_service.
+    RegistrationService`."""
+
     def __init__(self, cfg: ArchConfig, params, max_len: int = 2048):
         self.cfg = cfg
         self.params = params
