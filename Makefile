@@ -3,6 +3,7 @@
 #   make check       fast suite (slow-marked tests excluded) + bench smoke
 #   make test        fast test suite (default dev loop; slow/chaos excluded)
 #   make test-chaos  fault-injection chaos streams (marker: chaos)
+#   make test-multidevice  sharded fleet on a forced 8-device host platform
 #   make test-all    full tier-1 suite, including slow + chaos tests
 #   make lint        ruff (pyproject [tool.ruff]); stdlib fallback offline
 #   make bench       full benchmark harness (writes BENCH_*.json)
@@ -14,7 +15,8 @@
 
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test test-chaos test-all lint bench bench-smoke bench-guard
+.PHONY: check test test-chaos test-multidevice test-all lint bench \
+        bench-smoke bench-guard
 
 check: lint test bench-smoke
 
@@ -23,6 +25,12 @@ test:
 
 test-chaos:
 	python -m pytest -q -m chaos
+
+# The worker subprocess forces XLA_FLAGS itself; the bench smoke respawns
+# itself the same way (see benchmarks/device_sweep.py __main__ guard).
+test-multidevice:
+	python -m pytest -q -m multidevice
+	python -m benchmarks.device_sweep --quick
 
 test-all:
 	python -m pytest -q

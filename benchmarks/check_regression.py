@@ -43,6 +43,7 @@ THROUGHPUT_BASELINE = REPO_ROOT / "BENCH_throughput.json"
 ODOMETRY_BASELINE = REPO_ROOT / "BENCH_odometry.json"
 ROBUSTNESS_BASELINE = REPO_ROOT / "BENCH_robustness.json"
 SERVICE_BASELINE = REPO_ROOT / "BENCH_service.json"
+SCALEOUT_BASELINE = REPO_ROOT / "BENCH_scaleout.json"
 DEFAULT_TOLERANCE = 0.20
 # Median-of-N for timed ratio metrics (see module docstring). Absolute /
 # correctness metrics stay single-shot — they are deterministic, repeats
@@ -272,13 +273,56 @@ def check_service(guard: Guard) -> None:
                    runs[0]["parity_max_abs"], 0.0)
 
 
+def check_device_sweep(guard: Guard) -> None:
+    from benchmarks import device_sweep
+
+    baseline = json.loads(SCALEOUT_BASELINE.read_text())
+    # One quick-mode subprocess re-run (the sweep must initialise jax with
+    # a forced 8-device host platform, which this already-initialised
+    # 1-device process cannot — device_sweep respawns itself). Quick mode
+    # sweeps the D=1 and D=8 endpoints, which is exactly what the scaling
+    # ratio needs; median-of-repeats lives inside the sweep itself, so no
+    # TIMED_REPEATS wrapper — each extra repeat would pay the subprocess's
+    # full compile again instead of sharing a jit cache.
+    current = device_sweep.run_subprocess(quick=True)
+    d_lo, d_hi = min(current["devices"]), max(current["devices"])
+    scaling = (current["sweep"][str(d_hi)]["aggregate_fps"]
+               / current["sweep"][str(d_lo)]["aggregate_fps"])
+    # Weak-scaling retention is same-process fps(D=8)/fps(D=1); its D=1
+    # denominator is the same dispatch-dominated per-round regime as
+    # service/fps_ratio's sequential loop — same wide band.
+    guard.ratio("scaleout/scaling_x", scaling, baseline["scaling_x"],
+                tolerance=0.5)
+    # The fleet-batching headline: one fused round vs the eager
+    # per-stream loop on the same 8-stream workload (dispatch-dominated
+    # denominator again — same band as service/fps_ratio).
+    guard.ratio("scaleout/fused_vs_sequential",
+                current["fused_vs_sequential_x"],
+                baseline["fused_vs_sequential_x"], tolerance=0.5)
+    # Hard structural contracts, identical to the in-sweep asserts: the
+    # guard re-states them so a weakened assert cannot slip a regression
+    # past CI.
+    guard.absolute("scaleout/parity_max_abs",
+                   current["parity_max_abs"], 0.0)
+    guard.absolute("scaleout/retraces_after_warmup",
+                   float(current["retraces_after_warmup"]), 0.0)
+    # Deterministic memory layout: the fp16 headline may not erode below
+    # the 1.9x acceptance floor (tolerance=0.0 → hard floor at 1.9).
+    guard.ratio("scaleout/submap_bytes_ratio",
+                current["submap_bytes_ratio"], 1.9, tolerance=0.0)
+    # fp16 drift re-measured on the quick stream: same absolute band the
+    # odometry guard enforces for fp32.
+    guard.absolute("scaleout/fp16_drift_final",
+                   current["fp16_drift_final_m"], 0.5)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
                     help="allowed fractional regression (default 0.20)")
     ap.add_argument("--only",
                     choices=["nn", "throughput", "odometry", "robustness",
-                             "service"],
+                             "service", "device_sweep"],
                     default=None)
     args = ap.parse_args(argv)
     guard = Guard(args.tolerance)
@@ -292,6 +336,8 @@ def main(argv=None) -> int:
         check_robustness(guard)
     if args.only in (None, "service"):
         check_service(guard)
+    if args.only in (None, "device_sweep"):
+        check_device_sweep(guard)
     ok = guard.report()
     if not ok:
         print(f"\nbench-guard: regression beyond "

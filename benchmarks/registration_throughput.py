@@ -24,7 +24,11 @@ frames that motivates the engine layer. At KITTI scale the per-frame
 compute hides the effect in wall clock here, while on a real TPU it
 reappears as MXU idle.
 
-Also writes BENCH_throughput.json next to the CWD for CI trend tracking.
+Also writes BENCH_throughput.json next to the CWD for CI trend tracking,
+and appends the scale-out device-sweep rows (aggregate fleet frames/s vs
+device count, per-device bytes per resident submap fp32 vs fp16) from the
+committed BENCH_scaleout.json — pass ``device_sweep=True`` to re-measure
+them live via the forced-8-device subprocess instead.
 """
 from __future__ import annotations
 
@@ -56,8 +60,42 @@ def _make_pairs(batch: int, n: int, m: int, seed: int = 0):
     return pairs
 
 
+def _device_sweep_rows(remeasure: bool):
+    """The ROADMAP's device-sweep rows: aggregate frames/s vs device
+    count plus per-device memory per resident submap (fp32 vs fp16).
+
+    By default reads the committed BENCH_scaleout.json (the sweep needs a
+    forced 8-device subprocess — see benchmarks.device_sweep — and its
+    median-of-3 timing convention makes it minutes, not seconds).
+    ``remeasure=True`` respawns the sweep instead of reading the file.
+    """
+    scaleout = pathlib.Path(__file__).parent.parent / "BENCH_scaleout.json"
+    if remeasure:
+        from benchmarks import device_sweep
+        s = device_sweep.run_subprocess(quick=True)
+    elif scaleout.exists():
+        s = json.loads(scaleout.read_text())
+    else:
+        return []
+    rows = [
+        (f"throughput/device_sweep_d{d}",
+         1e6 / s["sweep"][str(d)]["aggregate_fps"]
+         * d * s["lanes_per_device"],
+         f"{s['sweep'][str(d)]['aggregate_fps']:.1f} frames/s aggregate;"
+         f"{d * s['lanes_per_device']} streams"
+         + ("" if remeasure else " (committed BENCH_scaleout.json)"))
+        for d in s["devices"]
+    ]
+    rows.append(("throughput/device_submap_bytes", 0.0,
+                 f"fp32={s['bytes_per_submap_fp32']}B "
+                 f"fp16={s['bytes_per_submap_fp16']}B per resident submap;"
+                 f"{s['submaps_per_gib_fp16']} fp16 submaps/GiB/device"))
+    return rows
+
+
 def run(batch: int = 16, n: int = 128, m: int = 256, iters: int = 8,
-        quick: bool = False, out_json: str | None = None):
+        quick: bool = False, device_sweep: bool = False,
+        out_json: str | None = None):
     if quick:
         batch, n, m, iters = 8, 128, 256, 6
         if out_json is None:
@@ -128,6 +166,7 @@ def run(batch: int = 16, n: int = 128, m: int = 256, iters: int = 8,
          f"max|dT|={agreement:.2e} (must be <=1e-4)"),
     ]
     assert agreement <= 1e-4, f"batch and loop disagree: {agreement}"
+    rows += _device_sweep_rows(remeasure=device_sweep)
     return rows
 
 

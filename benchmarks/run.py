@@ -20,6 +20,9 @@
   service -> service_throughput      (multi-stream fleet rounds vs the
                                          sequential per-stream loop;
                                          writes BENCH_service.json)
+  scaleout -> device_sweep           (sharded fleet over a forced 8-device
+                                         host platform, run in a subprocess;
+                                         writes BENCH_scaleout.json)
 
 ``--quick`` runs every suite in smoke mode (reduced scenes, 2 frames,
 fewer iterations) so CI can exercise all entry points in seconds.
@@ -30,8 +33,8 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (convergence, kernel_resources, nn_sweep,
-                        odometry_drift, power_efficiency,
+from benchmarks import (convergence, device_sweep, kernel_resources,
+                        nn_sweep, odometry_drift, power_efficiency,
                         registration_accuracy, registration_latency,
                         registration_throughput, robustness,
                         roofline_report, service_throughput)
@@ -49,6 +52,9 @@ SUITES = {
     "odometry": odometry_drift.run,
     "robustness": robustness.run,
     "service": service_throughput.run,
+    # run_harness respawns the sweep in a subprocess: this process's jax
+    # is already initialised with 1 device, the sweep needs a forced 8.
+    "scaleout": device_sweep.run_harness,
 }
 
 # Smoke-mode kwargs per suite (reduced scenes, 2 frames, short loops).
@@ -59,6 +65,7 @@ QUICK_KWARGS = {
     "power": dict(n_seqs=2, samples=512, iters=10, scene=QUICK_SCENE),
     "throughput": dict(quick=True),
     "service": dict(quick=True),
+    "scaleout": dict(quick=True),
 }
 # Suites whose smoke mode is a different entry point, not just kwargs.
 QUICK_SUITES = {"nn_sweep": nn_sweep.run_quick,

@@ -1,27 +1,36 @@
-"""Multi-device / multi-pod FPPS: shard_map registration engines.
+"""Multi-device FPPS: shard_map registration entry points.
 
-Two production configurations (DESIGN.md §4):
+The production scale-out path is **stream sharding** (DESIGN.md §14): a
+1-D ``("streams",)`` device mesh where each device owns a contiguous
+block of independent odometry streams — their scans, their registrations,
+AND their resident submaps. Streams never exchange data, so the shard
+body (:func:`stream_sharded_icp`: ``vmap(icp)`` over the device's lane
+block) contains **zero collectives**; the only device-boundary traffic is
+the host's bulk result fetch, once per fleet round. This is what the
+``sharded-slots`` engine and the sharded registration service run on.
 
-1. **Fleet mode** (`batched_icp_sharded`): a batch of independent frame-pairs
-   (e.g. thousands of concurrent registrations in a mapping fleet) is
-   sharded over the ``("pod", "data")`` axes; within each frame, the *target*
-   cloud is sharded over ``"model"``. Per ICP iteration the only collectives
-   are (a) an all-gather of per-shard winner (distance, point) candidates
-   over ``model`` — the cross-shard generalisation of the paper's CMP
-   comparison tree — and (b) nothing else: the Kabsch moments are computed
+Two **legacy single-frame** configurations predate it (DESIGN.md §4) and
+are kept for the workloads stream sharding does not cover — registrations
+whose *individual* target cloud outgrows one device:
+
+1. **Point-sharded fleet mode** (`batched_icp_sharded`): a batch of
+   frame-pairs sharded over ``("pod", "data")``; within each frame the
+   *target* cloud is sharded over ``"model"``. Per ICP iteration the only
+   collectives are an all-gather of per-shard winner (distance, point)
+   candidates over ``model`` — the cross-shard generalisation of the
+   paper's CMP comparison tree; the Kabsch moments are computed
    redundantly on every model-rank from the gathered winners (replicated
    math on 4k points beats a psum round-trip).
 
-2. **Giant-frame mode** (`icp_sharded`): one registration whose target cloud
-   is sharded over *every* device (``("data", "model")`` flattened, and
-   optionally ``pod`` too) — city-scale map-to-scan alignment. Same
-   combine, wider axis.
+2. **Giant-frame mode** (`icp_sharded`): one registration whose target
+   cloud is sharded over *every* device — city-scale map-to-scan
+   alignment. Same combine, wider axis.
 
-Design note: we gather winner *points*, never indices. A global-index gather
-(`dst[idx]` across shards) would be an all-to-all with data-dependent
-addressing; gathering the (d2, xyz) winner tuple is a dense, fixed-size
-all-gather of n·4 floats per shard — exactly the kind of regular collective
-the paper's streaming philosophy calls for.
+Design note (legacy combine): we gather winner *points*, never indices. A
+global-index gather (`dst[idx]` across shards) would be an all-to-all with
+data-dependent addressing; gathering the (d2, xyz) winner tuple is a
+dense, fixed-size all-gather of n·4 floats per shard — exactly the kind
+of regular collective the paper's streaming philosophy calls for.
 """
 from __future__ import annotations
 
@@ -30,11 +39,80 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import axis_size as _axis_size, shard_map
 from repro.core.icp import ICPParams, ICPResult, icp, icp_fixed_iterations
 from repro.core.nn_search import nn_search
+
+
+# -- stream sharding (the production scale-out path) ------------------------
+
+def streams_mesh(devices: int | None = None) -> Mesh:
+    """The 1-D ``("streams",)`` device mesh stream sharding runs on.
+
+    ``devices`` takes the first N local devices (None = all). Device ``d``
+    owns lane block ``[d*L, (d+1)*L)`` of every ``(S, ...)`` fleet array
+    placed with ``P("streams")`` — the slot->device mapping the sharded
+    registration service builds its placement policy on.
+    """
+    devs = jax.devices()
+    n = len(devs) if devices is None else int(devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"devices must be in [1, {len(devs)}], got {n}")
+    return Mesh(np.array(devs[:n]), ("streams",))
+
+
+def stream_sharded_icp(mesh: Mesh, src_b: jax.Array, dst_b: jax.Array,
+                       params: ICPParams = ICPParams(), *,
+                       initial_transforms: jax.Array | None = None,
+                       src_valid: jax.Array | None = None,
+                       dst_valid: jax.Array | None = None,
+                       nn_fn=None) -> ICPResult:
+    """S independent registrations sharded over a ``("streams",)`` mesh.
+
+    Every ``(S, ...)`` input shards along its lane axis; each device runs
+    ``vmap(icp)`` over its own contiguous block of ``S / D`` lanes. There
+    are NO collectives in the body — lanes are independent by
+    construction — so a lane's result is bitwise identical for any mesh
+    size serving the same lanes-per-device block width (the weak-scaling
+    parity contract the sharded service's tests assert). Masks/warm
+    starts default to all-ones / identity; ``nn_fn`` swaps the
+    correspondence searcher exactly as in ``core.icp.icp``.
+
+    Call it inside ``jax.jit`` for one fused executable (the
+    ``sharded-slots`` engine does); inputs not already placed with
+    ``P("streams")`` are resharded automatically at the jit boundary.
+    """
+    S = src_b.shape[0]
+    D = mesh.shape["streams"]
+    if S % D:
+        raise ValueError(f"lane count {S} must divide the streams mesh "
+                         f"size {D}")
+    if initial_transforms is None:
+        initial_transforms = jnp.broadcast_to(
+            jnp.eye(4, dtype=src_b.dtype), (S, 4, 4))
+    if src_valid is None:
+        src_valid = jnp.ones(src_b.shape[:2], bool)
+    if dst_valid is None:
+        dst_valid = jnp.ones(dst_b.shape[:2], bool)
+
+    def body(src_l, dst_l, T0_l, sv_l, dv_l):
+        def one(src, dst, T0, sv, dv):
+            return icp(src, dst, params, T0, nn_fn=nn_fn,
+                       src_valid=sv, dst_valid=dv)
+        return jax.vmap(one)(src_l, dst_l, T0_l, sv_l, dv_l)
+
+    spec = P("streams")
+    out_specs = ICPResult(T=spec, rmse=spec, iterations=spec,
+                          converged=spec, inlier_frac=spec, degenerate=spec)
+    fn = shard_map(body, mesh=mesh, in_specs=(spec,) * 5,
+                   out_specs=out_specs, check_vma=False)
+    return fn(src_b, dst_b, initial_transforms, src_valid, dst_valid)
+
+
+# -- legacy point-sharded paths ---------------------------------------------
 
 
 def _local_correspond(src_t: jax.Array, dst_local: jax.Array,
@@ -101,7 +179,9 @@ def icp_sharded(mesh: Mesh, source: jax.Array, target: jax.Array,
                 *, target_axes: Sequence[str] = ("data", "model"),
                 fixed_iterations: bool = False,
                 dst_normals: jax.Array | None = None) -> ICPResult:
-    """Giant-frame ICP: one registration, target sharded over target_axes.
+    """LEGACY giant-frame ICP: one registration, target sharded over
+    target_axes (city-scale map-to-scan; see module docstring for when to
+    prefer stream sharding).
 
     ``dst_normals`` (M, 3) — required for ``minimizer="point_to_plane"`` —
     is sharded alongside the target; estimate it on the *unsharded* cloud
@@ -139,7 +219,12 @@ def batched_icp_sharded(mesh: Mesh, src_batch: jax.Array,
                         fixed_iterations: bool = True,
                         src_valid: jax.Array | None = None,
                         dst_normals: jax.Array | None = None) -> ICPResult:
-    """Fleet mode: (F, N, 3) sources, (F, M, 3) targets.
+    """LEGACY point-sharded fleet mode: (F, N, 3) sources, (F, M, 3)
+    targets. Kept (and regression-tested against the xla engine) for
+    frames whose individual target cloud outgrows one device; for
+    fleet-scale serving use :func:`stream_sharded_icp` / the
+    ``sharded-slots`` engine, which shards *streams* with zero
+    collectives instead of paying the per-iteration winner all-gather.
 
     Frames shard over ``frame_axes`` (use ("pod", "data") on the multi-pod
     mesh); each frame's target shards over ``target_axes``. Defaults to the

@@ -506,6 +506,71 @@ class SlotEngine(RegistrationEngine):
         return jax.tree_util.tree_map(lambda x: x[0], res)
 
 
+class ShardedSlotEngine(SlotEngine):
+    """Device-parallel slot engine: the ``slots`` executable under
+    ``shard_map`` over a 1-D ``("streams",)`` mesh (DESIGN.md §14).
+
+    The fleet width is ``devices * lanes_per_device``; each device runs
+    the SAME ``vmap(icp)`` block over its own ``lanes_per_device`` lanes,
+    with zero collectives in the body (streams are independent). Because
+    the per-device block program is fixed by ``lanes_per_device`` alone,
+    a lane's result is bitwise identical across mesh sizes at EQUAL block
+    width — a D=8, L=1 fleet reproduces a single-device (D=1, L=1)
+    reference's per-stream poses exactly (weak-scaling parity), which is
+    the sharded service's acceptance contract. Across different widths
+    (say L=1 vs L=8) XLA may tile each lane's point-axis reductions
+    differently, so agreement is fp-tolerance, not bitwise.
+
+    Inherits the ``SlotEngine`` lane-0 embedding: a single-frame
+    :meth:`register` call runs through the same S-lane sharded
+    executable, so a standalone ``OdometryPipeline`` on this engine is
+    still the service's bit-exact reference. ``devices=0`` (the default,
+    kept an int so the ``get_engine`` singleton key stays hashable) means
+    all local devices.
+    """
+
+    name = "sharded-slots"
+
+    def __init__(self, chunk: int = 2048, lanes_per_device: int = 2,
+                 devices: int = 0):
+        from repro.core.distributed import streams_mesh
+        self.devices = int(devices) or jax.device_count()
+        self.lanes_per_device = int(lanes_per_device)
+        super().__init__(chunk, slots=self.devices * self.lanes_per_device)
+        self._mesh = streams_mesh(self.devices)
+
+    @property
+    def mesh(self):
+        """The ``("streams",)`` mesh every executable is sharded over."""
+        return self._mesh
+
+    def sharding(self):
+        """``NamedSharding`` for lane-major fleet arrays: place ``(S,...)``
+        inputs with this to avoid a reshard at the jit boundary."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        return NamedSharding(self._mesh, PartitionSpec("streams"))
+
+    def _build_batch(self, params: ICPParams):
+        from repro.core.distributed import stream_sharded_icp
+        nn_fn = self._nn_fn(params)
+        mesh = self._mesh
+
+        def run(src_b, dst_b, T0, sv, dv):
+            self._note_trace("batch", params, src_b.shape, dst_b.shape)
+            # shard_map's in_specs are fixed-arity: normalize the optional
+            # masks/warm starts here (identical defaults to SlotEngine's).
+            if sv is None:
+                sv = jnp.ones(src_b.shape[:2], bool)
+            if dv is None:
+                dv = jnp.ones(dst_b.shape[:2], bool)
+            return stream_sharded_icp(mesh, src_b, dst_b, params,
+                                      initial_transforms=T0,
+                                      src_valid=sv, dst_valid=dv,
+                                      nn_fn=nn_fn)
+
+        return jax.jit(run)
+
+
 class CallableEngine(RegistrationEngine):
     """Adapter for a user-supplied ``nn_fn(src, dst) -> (d2, idx)``."""
 
@@ -574,6 +639,7 @@ register_engine("xla", XLAEngine)
 register_engine("pallas", PallasEngine)
 register_engine("distributed", DistributedEngine)
 register_engine("slots", SlotEngine)
+register_engine("sharded-slots", ShardedSlotEngine)
 
 # Imported for its side effect: registers the "pyramid" engine. Lives in
 # its own module (it pulls in the voxel/grid-NN stack); bottom import keeps

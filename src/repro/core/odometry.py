@@ -154,6 +154,10 @@ class FrameDiagnostics(NamedTuple):
     recovery_tier: int = 0  # 0 primary; 1..N retry tier; N+1 coasted
     pose_jump: float = 0.0  # metres vs. the motion-model prediction
     quarantined: bool = False   # scan withheld from the map
+    dropped_cells: int = 0  # sticky submap-saturation counter (running
+                            # total of occupied voxels the capacity budget
+                            # dropped — distinguishes a clean 1.0
+                            # occupancy from silent truncation)
 
 
 # Frame classification out of prepare_frame: which half of the frame
@@ -244,7 +248,8 @@ class OdometryPipeline:
     across frames and across pipeline instances.
     """
 
-    def __init__(self, config: OdometryConfig = OdometryConfig()):
+    def __init__(self, config: OdometryConfig = OdometryConfig(),
+                 submap: Submap | None = None):
         self.config = config
         kwargs = dict(config.engine_kwargs)
         if config.engine != "pyramid":
@@ -252,7 +257,10 @@ class OdometryPipeline:
             # schedule; they don't apply to other engine constructors
             kwargs.pop("levels", None)
         self.engine = get_engine(config.engine, **kwargs)
-        self.submap = Submap(config.submap)
+        # ``submap`` lets a fleet owner substitute a view over shared
+        # device state (the sharded service's lane views) for the default
+        # per-stream map; anything duck-typing Submap's read surface works.
+        self.submap = Submap(config.submap) if submap is None else submap
         self.poses: list[np.ndarray] = []
         self.diagnostics: list[FrameDiagnostics] = []
         # inter-frame velocity v = T_{k-1}^{-1} T_k, decayed on rejection
@@ -434,7 +442,8 @@ class OdometryPipeline:
 
     def complete_frame(self, prep: PreparedFrame, result=None, *,
                        lattice_frac: float | None = None,
-                       defer_fuse: bool = False):
+                       defer_fuse: bool = False,
+                       defer_bootstrap: bool = False):
         """Host-side frame completion: health assessment, recovery
         cascade, accept/quarantine bookkeeping, map fusion. Returns
         ``(pose, diagnostics, fuse_request)``.
@@ -447,17 +456,27 @@ class OdometryPipeline:
         accepted fusable frame returns a :class:`FuseRequest` instead of
         inserting into the submap — the caller owns the fuse and must
         then patch ``diag.map_occupancy`` (reported here as the pre-fuse
-        value).
+        value). ``defer_bootstrap=True`` (sharded service: the fleet's
+        submaps live in sharded device state no per-stream insert can
+        write) extends the deferral to the bootstrap frame's first
+        insert, as a ``FuseRequest`` with the identity pose.
         """
         cfg = self.config
         frame, src, sv, T0 = prep.frame, prep.src, prep.sv, prep.T0
         fuse_req = None
         if prep.kind == KIND_BOOTSTRAP:
             pose = np.eye(4, dtype=np.float32)
-            self.submap.insert(src, center=np.zeros(3, np.float32), valid=sv)
+            if defer_fuse and defer_bootstrap:
+                fuse_req = FuseRequest(src=src, sv=sv, pose=pose)
+                occ = -1.0
+            else:
+                self.submap.insert(src, center=np.zeros(3, np.float32),
+                                   valid=sv)
+                occ = self.submap.occupancy()
             diag = FrameDiagnostics(frame=0, iterations=0, inlier_frac=1.0,
                                     rmse=0.0, degenerate=False, accepted=True,
-                                    map_occupancy=self.submap.occupancy())
+                                    map_occupancy=occ,
+                                    dropped_cells=self.submap.dropped_cells)
         elif prep.kind == KIND_EMPTY:
             # dropped frame (no usable returns): coast without spending a
             # registration, quarantine, decay the velocity
@@ -474,7 +493,8 @@ class OdometryPipeline:
                                     degenerate=True, accepted=False,
                                     map_occupancy=self.submap.occupancy(),
                                     health=FAILED, recovery_tier=tier,
-                                    quarantined=True)
+                                    quarantined=True,
+                                    dropped_cells=self.submap.dropped_cells)
         else:
             reacquire = prep.reacquire
             if cfg.recovery and frame >= cfg.warmup_frames:
@@ -540,7 +560,8 @@ class OdometryPipeline:
                                else self.submap.occupancy()),
                 health=health.verdict, recovery_tier=tier,
                 pose_jump=health.pose_jump_m,
-                quarantined=not fused)
+                quarantined=not fused,
+                dropped_cells=self.submap.dropped_cells)
         self.poses.append(pose)
         self.diagnostics.append(diag)
         return pose, diag, fuse_req

@@ -24,6 +24,29 @@ that map, built from the repo's own static-shape primitives:
     the grid searcher never has to fall back, while anything the ego
     outran is reported honestly instead of matched to a boundary cell.
 
+**Storage modes** (``SubmapParams.storage``, DESIGN.md §14): the resident
+cell payload is either
+
+  * ``"fp32"`` — world-frame points + a bool validity mask (the seed
+    layout, byte-for-byte: 13 B per cell row), or
+  * ``"fp16"`` — half-precision offsets *relative to the fp32 lattice
+    origin*, with invalid rows parked at +inf so validity derives from
+    ``isfinite`` and no separate mask is stored: 6 B per cell row,
+    2.17x more resident submaps per byte. Offsets are guaranteed
+    non-negative and bounded by ``dims * voxel_size`` (the fuse's
+    in-lattice filter), so the half-precision quantization error is
+    ≤ half an ulp at the far lattice edge (~1.6 cm at 64 m for the
+    default lattice) — sensor-noise scale, averaged out further by the
+    centroid fuse. Accumulation always runs in fp32: every fuse decodes
+    to world-frame fp32, runs the exact fp32 fuse math, and re-encodes.
+
+The state itself is a plain tuple of arrays (``empty_state`` /
+``fuse_state`` / ``state_views``) so fleet-scale consumers — the sharded
+registration service — can hold thousands of submaps as stacked,
+device-sharded leaves without going through per-stream objects; the
+:class:`Submap` class is the single-stream host-facing wrapper over the
+same functions.
+
 The map lives in map/world frame (frame 0 of the stream); callers
 transform scans by their estimated pose before inserting
 (``repro.core.odometry.OdometryPipeline`` does this per frame).
@@ -39,6 +62,8 @@ import jax.numpy as jnp
 from repro.data.collate import PAD_SENTINEL
 from repro.data.voxelize import VoxelGrid, build_voxel_grid, voxel_downsample
 
+STORAGE_MODES = ("fp32", "fp16")
+
 
 class SubmapParams(NamedTuple):
     """Static submap configuration (hashable: jit-cache friendly).
@@ -47,23 +72,74 @@ class SubmapParams(NamedTuple):
     cover the eviction sphere (``2 * evict_radius``) or the in-lattice
     filter will evict before the distance filter does. ``capacity`` is the
     static point budget; occupied voxels beyond it are dropped
-    deterministically by ``voxel_downsample`` (watch ``occupancy()``
-    saturate toward 1.0 as the budget fills).
+    deterministically by ``voxel_downsample`` (the sticky
+    ``Submap.dropped_cells`` counter reports it — a saturated budget no
+    longer hides behind a healthy-looking 1.0 occupancy). ``storage``
+    picks the resident payload layout (module docstring): ``"fp32"`` is
+    the seed-exact layout, ``"fp16"`` the memory-lean one.
     """
 
     voxel_size: float = 0.5
     capacity: int = 16384
     dims: tuple[int, int, int] = (192, 192, 48)   # 96 m x 96 m x 24 m
     evict_radius: float = 45.0
+    storage: str = "fp32"
 
 
-@functools.partial(jax.jit, static_argnames=("params",))
-def _fuse(map_pts, map_valid, new_pts, new_valid, center,
-          params: SubmapParams):
-    """One insert+evict+re-anchor step, fully static-shape.
+# -- functional state API (fleet-batchable) ---------------------------------
+#
+# A submap's device state is a tuple of arrays:
+#   fp32: (points (cap,3) f32 world-frame, valid (cap,) bool, origin (3,))
+#   fp16: (store  (cap,3) f16 origin-relative offsets,        origin (3,))
+# The origin is always the LAST leaf; fp16 validity derives from isfinite
+# on the stored offsets (+inf rows are the invalid sentinels). Every
+# function here is jit-safe with ``params`` static, and vmaps cleanly —
+# the sharded service stacks these leaves into (S, ...) fleet arrays.
 
-    Returns (points, valid, origin) at ``params.capacity`` rows.
-    """
+def empty_state(params: SubmapParams) -> tuple:
+    """The idle (no points) state tuple for ``params``."""
+    cap = int(params.capacity)
+    origin = jnp.zeros((3,), jnp.float32)
+    if params.storage == "fp16":
+        store = jnp.full((cap, 3), jnp.inf, jnp.float16)
+        return store, origin
+    points = jnp.full((cap, 3), PAD_SENTINEL, jnp.float32)
+    valid = jnp.zeros((cap,), bool)
+    return points, valid, origin
+
+
+def state_views(state: tuple, params: SubmapParams):
+    """Decode a state tuple to registration-target form:
+    ``(points f32 world-frame, valid bool, origin)``. Invalid rows carry
+    ``PAD_SENTINEL`` (collate conventions) in both modes. The fp32 mode
+    returns its leaves untouched — zero device ops, bit-identity with the
+    seed layout; fp16 decodes ``origin + offset`` in fp32."""
+    if params.storage == "fp16":
+        store, origin = state
+        valid = jnp.isfinite(store[:, 0])
+        points = jnp.where(valid[:, None],
+                           origin + store.astype(jnp.float32),
+                           jnp.asarray(PAD_SENTINEL, jnp.float32))
+        return points, valid, origin
+    points, valid, origin = state
+    return points, valid, origin
+
+
+def encode_state(points, valid, origin, params: SubmapParams) -> tuple:
+    """Pack decoded ``(points, valid, origin)`` into the storage layout."""
+    if params.storage == "fp16":
+        store = jnp.where(valid[:, None], points - origin,
+                          jnp.asarray(jnp.inf, jnp.float32))
+        return store.astype(jnp.float16), origin
+    return points, valid, origin
+
+
+def _fuse_core(map_pts, map_valid, new_pts, new_valid, center,
+               params: SubmapParams):
+    """One insert+evict+re-anchor step on decoded fp32 state, fully
+    static-shape. Returns ``(points, valid, origin, dropped_cells)`` at
+    ``params.capacity`` rows — the exact seed fuse math plus the
+    occupied-cell overflow count."""
     v = jnp.asarray(params.voxel_size, jnp.float32)
     dims = jnp.asarray(params.dims, jnp.float32)
     # Re-anchor: lattice centred on the ego, snapped to the voxel grid so
@@ -78,10 +154,48 @@ def _fuse(map_pts, map_valid, new_pts, new_valid, center,
     # point has honest cell membership (no build-time boundary clipping).
     ic = jnp.floor((pts - origin) / v)
     valid = valid & jnp.all((ic >= 0) & (ic < dims), axis=-1)
-    fused, fused_valid = voxel_downsample(pts, v,
-                                          max_points=params.capacity,
-                                          valid=valid, origin=origin)
+    fused, fused_valid, dropped = voxel_downsample(
+        pts, v, max_points=params.capacity, valid=valid, origin=origin,
+        with_stats=True)
+    return fused, fused_valid, origin, dropped
+
+
+def fuse_state(state: tuple, new_pts, new_valid, center,
+               params: SubmapParams):
+    """Fuse a world-frame scan into a state tuple. Returns
+    ``(state', occupied, dropped)`` — occupied is the post-fuse valid-cell
+    count, dropped the occupied cells the capacity could not hold. The
+    fuse math runs in fp32 in both storage modes (fp16 decodes first and
+    re-encodes after), so the only fp16-vs-fp32 divergence is the stored
+    offsets' quantization."""
+    map_pts, map_valid, _ = state_views(state, params)
+    fused, fused_valid, origin, dropped = _fuse_core(
+        map_pts, map_valid, new_pts, new_valid, center, params)
+    new_state = encode_state(fused, fused_valid, origin, params)
+    return new_state, jnp.sum(fused_valid), dropped
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def _fuse_state_jit(state, new_pts, new_valid, center,
+                    params: SubmapParams):
+    return fuse_state(state, new_pts, new_valid, center, params)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def _fuse(map_pts, map_valid, new_pts, new_valid, center,
+          params: SubmapParams):
+    """Seed-signature fuse (fp32 layout in, fp32 layout out) — kept for
+    callers that manage bare (points, valid, origin) triples."""
+    fused, fused_valid, origin, _ = _fuse_core(
+        map_pts, map_valid, new_pts, new_valid, center, params)
     return fused, fused_valid, origin
+
+
+def state_bytes(params: SubmapParams) -> int:
+    """Device bytes of one resident submap's cell payload (origin leaf
+    excluded — 12 B either way). The fp32/fp16 ratio here is the
+    memory-lean headline: 13 B/row -> 6 B/row."""
+    return sum(leaf.nbytes for leaf in empty_state(params)[:-1])
 
 
 class Submap:
@@ -90,16 +204,23 @@ class Submap:
     Host-facing stateful wrapper over the jitted fuse step; one instance
     per stream. ``points``/``valid`` follow collate conventions (invalid
     rows carry ``PAD_SENTINEL``), so the map drops straight into the
-    engine layer as a registration target, mask-aware or not.
+    engine layer as a registration target, mask-aware or not. Both are
+    decoded views over :attr:`state` (identity in fp32 mode).
+
+    ``dropped_cells`` is the sticky saturation counter: the running total
+    of occupied voxels the capacity budget could not hold across every
+    insert. A healthy map keeps it at 0; a saturated one grows it while
+    ``occupancy()`` sits at a deceptively clean 1.0.
     """
 
     def __init__(self, params: SubmapParams = SubmapParams()):
+        if params.storage not in STORAGE_MODES:
+            raise ValueError(f"storage must be one of {STORAGE_MODES}, "
+                             f"got {params.storage!r}")
         self.params = params
-        cap = int(params.capacity)
-        self.points = jnp.full((cap, 3), PAD_SENTINEL, jnp.float32)
-        self.valid = jnp.zeros((cap,), bool)
-        self.origin = jnp.zeros((3,), jnp.float32)
+        self.state = empty_state(params)
         self.frames_inserted = 0
+        self.dropped_cells = 0
 
     def insert(self, points, center, valid=None) -> None:
         """Fuse a (N, 3) map-frame cloud; evict + re-anchor around
@@ -109,15 +230,30 @@ class Submap:
             valid = jnp.ones((pts.shape[0],), bool)
         else:
             valid = jnp.asarray(valid, bool)
-        self.points, self.valid, self.origin = _fuse(
-            self.points, self.valid, pts, valid,
-            jnp.asarray(center, jnp.float32), self.params)
+        self.state, _, dropped = _fuse_state_jit(
+            self.state, pts, valid, jnp.asarray(center, jnp.float32),
+            self.params)
         self.frames_inserted += 1
+        self.dropped_cells += int(dropped)
+
+    # -- decoded views -----------------------------------------------------
+    @property
+    def points(self) -> jax.Array:
+        return state_views(self.state, self.params)[0]
+
+    @property
+    def valid(self) -> jax.Array:
+        return state_views(self.state, self.params)[1]
+
+    @property
+    def origin(self) -> jax.Array:
+        return self.state[-1]
 
     # -- registration-target views ----------------------------------------
     def target(self):
         """(points, valid) — feed to ``RegistrationEngine.register``."""
-        return self.points, self.valid
+        pts, valid, _ = state_views(self.state, self.params)
+        return pts, valid
 
     def grid(self) -> VoxelGrid:
         """Counting-sort grid over the live map (anchored at the rolling
@@ -133,7 +269,7 @@ class Submap:
         return int(jnp.sum(self.valid))
 
     def occupancy(self) -> float:
-        """Fraction of the static capacity in use (1.0 = budget saturated,
-        inserts are dropping cells — grow ``capacity`` or shrink
-        ``evict_radius``)."""
+        """Fraction of the static capacity in use (1.0 = budget saturated
+        — check ``dropped_cells`` to tell an exact fit from silent
+        truncation; grow ``capacity`` or shrink ``evict_radius``)."""
         return self.size / int(self.params.capacity)

@@ -123,7 +123,8 @@ def _default_origin(points, valid, voxel_size):
 def voxel_downsample(points: jax.Array, voxel_size, *,
                      max_points: int,
                      valid: jax.Array | None = None,
-                     origin: jax.Array | None = None):
+                     origin: jax.Array | None = None,
+                     with_stats: bool = False):
     """Centroid voxel downsample with static output capacity.
 
     Args:
@@ -136,11 +137,17 @@ def voxel_downsample(points: jax.Array, voxel_size, *,
         excluded from every centroid.
       origin: optional (3,) lattice anchor; default snaps the valid min to
         the voxel lattice.
+      with_stats: also return the number of occupied cells that did NOT
+        fit the capacity — the saturation signal a bare validity mask
+        cannot express (a full mask reads the same whether the budget
+        exactly fit or silently truncated).
 
     Returns:
       (centroids, out_valid): ((max_points, 3) f32, (max_points,) bool).
       Invalid output rows carry ``PAD_SENTINEL`` coordinates, matching the
       collator's convention, so downstream searchers need no special cases.
+      With ``with_stats=True``, ``(centroids, out_valid, dropped)`` where
+      ``dropped`` is an int32 scalar (0 when every occupied cell fit).
     """
     m = points.shape[0]
     cap = min(int(max_points), m)
@@ -161,6 +168,11 @@ def voxel_downsample(points: jax.Array, voxel_size, *,
     prev = jnp.roll(ics, 1, axis=0)
     new_cell = jnp.any(ics != prev, axis=-1).at[0].set(True)
     seg = jnp.cumsum(new_cell.astype(jnp.int32)) - 1      # compacted cell idx
+    # Occupied-cell count BEFORE the capacity scatter drops the overflow:
+    # valid rows carry compacted indices 0..occupied-1 (invalid rows sit in
+    # tail cells of their own and are masked out here).
+    occupied = jnp.max(jnp.where(vs, seg, -1)) + 1
+    dropped = jnp.maximum(occupied - cap, 0).astype(jnp.int32)
     # Invalid rows (and overflow cells) scatter out of range -> dropped.
     seg = jnp.where(vs, seg, cap)
     ones = vs.astype(jnp.float32)
@@ -175,6 +187,8 @@ def voxel_downsample(points: jax.Array, voxel_size, *,
         centroids = jnp.concatenate(
             [centroids, jnp.full((pad, 3), PAD_SENTINEL, jnp.float32)])
         out_valid = jnp.concatenate([out_valid, jnp.zeros((pad,), bool)])
+    if with_stats:
+        return centroids, out_valid, dropped
     return centroids, out_valid
 
 

@@ -1,5 +1,6 @@
 """Multi-stream registration service: N odometry streams, one compiled
-program per round (DESIGN.md §13).
+program per round (DESIGN.md §13), optionally sharded over a device mesh
+(DESIGN.md §14).
 
 The paper's headline number is a *runtime-weighted* speedup across a
 workload mix (§IV) — a shared-accelerator framing. This module is that
@@ -12,6 +13,21 @@ health verdicts, the recovery cascade, accept/quarantine bookkeeping —
 stays host-side per stream, reusing :class:`~repro.core.odometry.
 OdometryPipeline` verbatim, so the service inherits every robustness
 behaviour of PR 5–7 without forking the policy code.
+
+**Sharded mode** (``ServiceConfig.devices=D``): the same round runs under
+``shard_map`` over a 1-D ``("streams",)`` device mesh. Each device owns a
+contiguous block of ``slots / D`` slot lanes AND their resident submaps —
+the fleet's map state lives device-resident as sharded ``(S, ...)``
+arrays (``repro.data.submap`` state tuples) instead of per-stream host
+objects, and the prepare/register/probe/fuse executables all run inside
+the shard body with **zero cross-device collectives** (streams are
+independent by construction). Host-boundary traffic per round is the
+bulk classification fetch, ONE bulk registration+probe health fetch, and
+the fuse's occupancy epilogue — all batched, none per-stream. The host
+control plane is unchanged: per-stream pipelines see the fleet state
+through :class:`_LaneSubmap` views. Admission is mesh-aware (least-loaded
+device block) and a retired slot's lane state is reset in place, so
+join/retire churn never retraces and never leaks a predecessor's map.
 
 Retrace avoidance is structural, not best-effort: all device arrays are
 fixed-shape — ``(slots, scan_capacity, 3)`` staged scans,
@@ -28,16 +44,23 @@ Bit-exactness contract: a standalone ``OdometryPipeline`` built from
 frames produces bit-identical poses and diagnostics — the single-frame
 path embeds into the *same* S-lane executable (``SlotEngine.register``),
 and a vmapped lane is bitwise independent of lane index and of the other
-lanes' contents.
+lanes' contents. In sharded mode the contract extends across mesh sizes
+at equal block width: the per-device program is fixed by
+``slots / devices`` alone, so a D=8, one-lane-per-device fleet
+reproduces a single-device one-lane reference's per-stream poses
+bit-for-bit (weak-scaling parity — see ``ShardedSlotEngine``; across
+*different* block widths agreement is fp-tolerance, since XLA may tile a
+lane's point-axis reductions differently).
 
 Typical use::
 
-    svc = RegistrationService(ServiceConfig(slots=8))
+    svc = RegistrationService(ServiceConfig(slots=8))      # single-device
+    svc = RegistrationService(ServiceConfig(slots=16, devices=8))
     for vid in vehicle_ids:
         svc.admit(vid)
     while streaming:
         for vid, scan in poll_sensors():
-            svc.submit(vid, scan)            # host->device staging (async)
+            svc.submit(vid, scan)            # staging (async)
         for vid, (pose, diag) in svc.step().items():
             publish(vid, pose, diag)
 """
@@ -50,15 +73,17 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.engine import get_engine
 from repro.core.icp import scrub_nonfinite
 from repro.core.odometry import (KIND_REGISTER, FrameDiagnostics,
                                  OdometryConfig, OdometryPipeline)
 from repro.core.transform import transform_points
 from repro.data.collate import PAD_SENTINEL, bucket_size, pad_cloud
-from repro.data.submap import SubmapParams
-from repro.data.submap import _fuse as _submap_fuse
+from repro.data.submap import (SubmapParams, empty_state, fuse_state,
+                               state_views)
 from repro.data.voxelize import voxel_downsample
 
 
@@ -76,6 +101,12 @@ class ServiceConfig(NamedTuple):
     ``"newest"`` submission. All streams share one odometry config —
     one config means one ``ICPParams``/shape family, which is what keeps
     the fleet inside a single compiled program.
+
+    ``devices`` switches the service to device-sharded mode (module
+    docstring): the fleet round runs under ``shard_map`` over the first
+    ``devices`` local devices, each owning ``slots / devices`` lanes and
+    their resident submaps. ``None`` (default) is the single-device
+    path, byte-for-byte the pre-sharding service.
     """
 
     slots: int = 8
@@ -84,6 +115,7 @@ class ServiceConfig(NamedTuple):
     drop_policy: str = "oldest"
     admission: str = "queue"
     odometry: OdometryConfig = OdometryConfig()
+    devices: int | None = None
 
 
 class StreamReport(NamedTuple):
@@ -103,18 +135,21 @@ class StreamReport(NamedTuple):
 
 
 class _StagedFrame(NamedTuple):
-    # device-resident staged scan: padded to (scan_capacity, 3) + mask
-    pts: jax.Array
-    valid: jax.Array
+    # staged scan padded to (scan_capacity, 3) + mask. Single-device mode
+    # stages device-resident (async transfer overlaps the in-flight
+    # round); sharded mode stages host-side so each round issues ONE
+    # sharded transfer that lands every lane on its owning device.
+    pts: object
+    valid: object
     seq: int
 
 
 class _Stream:
     """Host-side stream record: its pipeline, staging queue, counters."""
 
-    def __init__(self, stream_id: str, pipe: OdometryPipeline):
+    def __init__(self, stream_id: str):
         self.id = stream_id
-        self.pipe = pipe
+        self.pipe: OdometryPipeline | None = None
         self.queue: deque[_StagedFrame] = deque()
         self.slot: int | None = None
         self.submitted = 0
@@ -122,17 +157,103 @@ class _Stream:
         self.cascade_escapes = 0
 
 
+class _LaneSubmap:
+    """Duck-typed Submap view over one lane of the sharded fleet state.
+
+    The host control plane (cascade tiers, lattice probes, occupancy
+    diagnostics) reads per-stream map state through the same attribute
+    surface as :class:`~repro.data.submap.Submap`; this view resolves
+    those reads against the service's sharded ``(S, ...)`` fleet arrays
+    at the stream's *current* slot (rebinding-safe). Occupancy and the
+    sticky ``dropped_cells`` counter are host caches updated from each
+    batched fuse's epilogue, so control-plane reads cost no device
+    fetch. All writes go through the service's batched fuse —
+    ``insert`` is therefore a usage error here."""
+
+    def __init__(self, svc: "RegistrationService", stream: _Stream):
+        self._svc = svc
+        self._stream = stream
+        self.params: SubmapParams = svc.stream_config.submap
+        self.frames_inserted = 0
+        self.dropped_cells = 0
+        self._occupied = 0
+
+    def _lane_state(self) -> tuple:
+        lane = self._stream.slot
+        if lane is None:
+            raise RuntimeError(f"stream {self._stream.id!r} has no slot "
+                               f"bound; its lane state does not exist yet")
+        return tuple(leaf[lane] for leaf in self._svc._fleet)
+
+    @property
+    def origin(self):
+        return self._lane_state()[-1]
+
+    @property
+    def points(self):
+        return state_views(self._lane_state(), self.params)[0]
+
+    @property
+    def valid(self):
+        return state_views(self._lane_state(), self.params)[1]
+
+    def target(self):
+        pts, valid, _ = state_views(self._lane_state(), self.params)
+        return pts, valid
+
+    @property
+    def size(self) -> int:
+        return self._occupied
+
+    def occupancy(self) -> float:
+        return self._occupied / int(self.params.capacity)
+
+    def insert(self, *a, **k):
+        raise RuntimeError("sharded service submaps are fused in the "
+                           "batched fleet round, never inserted per-stream")
+
+
+# -- shared one-lane bodies --------------------------------------------------
+# The single source of the per-lane math, used by BOTH the single-device
+# jits and the sharded (shard_map) factories: one definition means the two
+# modes are bit-identical per lane by construction.
+
+def _prepare_one(pts, valid, voxel, budget):
+    pts, valid = scrub_nonfinite(pts, valid)
+    return voxel_downsample(pts, voxel, max_points=budget, valid=valid)
+
+
+def _lattice_one(T, src, sv, origin, params: SubmapParams):
+    pts = transform_points(T, src)
+    c = jnp.floor((pts - origin) / params.voxel_size)
+    inb = jnp.all((c >= 0) & (c < jnp.asarray(params.dims, jnp.float32)),
+                  axis=-1)
+    n_valid = jnp.maximum(jnp.sum(sv), 1)
+    return jnp.sum(jnp.logical_and(sv, ~inb)) / n_valid
+
+
+def _fuse_one(state, src, sv, pose, acc, params: SubmapParams):
+    """One lane's accept-gated submap fuse on a storage-mode state tuple.
+    Non-accepted lanes pass their state through bit-unchanged (and
+    contribute zero dropped cells); occupancy reports the KEPT state."""
+    world = transform_points(pose, src)
+    fused, occ, dropped = fuse_state(state, world, sv, pose[:3, 3], params)
+    kept = jax.tree_util.tree_map(
+        lambda new, old: jnp.where(acc, new, old), fused, state)
+    occ_kept = jnp.where(acc, occ, jnp.sum(state_views(kept, params)[1]))
+    return kept, occ_kept, jnp.where(acc, dropped, 0)
+
+
+# -- single-device executables ----------------------------------------------
+
 @functools.partial(jax.jit, static_argnames=("voxel", "budget"))
 def _prepare_batch(pts_b, valid_b, voxel: float, budget: int):
     """Vmapped sensor-boundary stage: scrub NaN/Inf rows and voxel-
     downsample every staged lane in one executable. Returns
     ``(src_b, sv_b, n_valid_b)`` — each lane bit-identical to the eager
     per-frame path in ``OdometryPipeline.prepare_frame``."""
-    def one(pts, valid):
-        pts, valid = scrub_nonfinite(pts, valid)
-        return voxel_downsample(pts, voxel, max_points=budget, valid=valid)
-
-    src_b, sv_b = jax.vmap(one)(pts_b, valid_b)
+    src_b, sv_b = jax.vmap(
+        lambda p, v: _prepare_one(p, v, voxel, budget))(pts_b, valid_b)
     return src_b, sv_b, jnp.sum(sv_b, axis=1)
 
 
@@ -140,42 +261,114 @@ def _prepare_batch(pts_b, valid_b, voxel: float, budget: int):
 def _lattice_batch(T_b, src_b, sv_b, origin_b, params: SubmapParams):
     """Vmapped out-of-lattice probe — the batched spelling of
     ``OdometryPipeline._out_of_lattice_frac`` over every fleet lane."""
-    def one(T, src, sv, origin):
-        pts = transform_points(T, src)
-        c = jnp.floor((pts - origin) / params.voxel_size)
-        inb = jnp.all((c >= 0) & (c < jnp.asarray(params.dims, jnp.float32)),
-                      axis=-1)
-        n_valid = jnp.maximum(jnp.sum(sv), 1)
-        return jnp.sum(jnp.logical_and(sv, ~inb)) / n_valid
-
-    return jax.vmap(one)(T_b, src_b, sv_b, origin_b)
+    return jax.vmap(
+        lambda T, s, v, o: _lattice_one(T, s, v, o, params))(
+            T_b, src_b, sv_b, origin_b)
 
 
 @functools.partial(jax.jit, static_argnames=("params",),
-                   donate_argnums=(0, 1))
-def _fuse_batch(map_pts_b, map_valid_b, origin_b, src_b, sv_b, pose_b,
-                accept_b, params: SubmapParams):
-    """Vmapped submap fuse with per-lane accept select. The incoming map
-    buffers are donated — the largest arrays in the service reuse their
-    device allocation in place, the ring-buffer idiom of the on-chip
-    designs this layer mirrors. Non-accepted lanes pass their map state
-    through bit-unchanged."""
-    def one(mp, mv, origin, src, sv, pose, acc):
-        world = transform_points(pose, src)
-        fp, fv, forigin = _submap_fuse(mp, mv, world, sv, pose[:3, 3],
-                                       params)
-        return (jnp.where(acc, fp, mp), jnp.where(acc, fv, mv),
-                jnp.where(acc, forigin, origin))
+                   donate_argnums=(0,))
+def _fuse_batch(state_b, src_b, sv_b, pose_b, accept_b,
+                params: SubmapParams):
+    """Vmapped submap fuse with per-lane accept select over stacked
+    storage-mode state tuples. The incoming map state is donated — the
+    largest arrays in the service reuse their device allocation in
+    place, the ring-buffer idiom of the on-chip designs this layer
+    mirrors. Returns ``(state_b', occupied_b, dropped_b)``."""
+    return jax.vmap(
+        lambda st, s, v, p, a: _fuse_one(st, s, v, p, a, params))(
+            state_b, src_b, sv_b, pose_b, accept_b)
 
-    fp_b, fv_b, fo_b = jax.vmap(one)(map_pts_b, map_valid_b, origin_b,
-                                     src_b, sv_b, pose_b, accept_b)
-    return fp_b, fv_b, fo_b, jnp.sum(fv_b, axis=1)
+
+# -- sharded executables (one per mesh + static config, cached) -------------
+
+_SPEC = P("streams")
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_prepare(mesh, voxel: float, budget: int):
+    def body(pts_l, valid_l):
+        src, sv = jax.vmap(
+            lambda p, v: _prepare_one(p, v, voxel, budget))(pts_l, valid_l)
+        return src, sv, jnp.sum(sv, axis=1)
+
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(_SPEC, _SPEC),
+                             out_specs=(_SPEC, _SPEC, _SPEC),
+                             check_vma=False))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_lattice(mesh, params: SubmapParams):
+    def body(T_l, src_l, sv_l, origin_l):
+        return jax.vmap(
+            lambda T, s, v, o: _lattice_one(T, s, v, o, params))(
+                T_l, src_l, sv_l, origin_l)
+
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(_SPEC,) * 4,
+                             out_specs=_SPEC, check_vma=False))
+
+
+def _state_spec(params: SubmapParams) -> tuple:
+    return tuple(_SPEC for _ in empty_state(params))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_fuse(mesh, params: SubmapParams):
+    sspec = _state_spec(params)
+
+    def body(state_l, src_l, sv_l, pose_l, acc_l):
+        return jax.vmap(
+            lambda st, s, v, p, a: _fuse_one(st, s, v, p, a, params))(
+                state_l, src_l, sv_l, pose_l, acc_l)
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(sspec, _SPEC, _SPEC, _SPEC, _SPEC),
+                             out_specs=(sspec, _SPEC, _SPEC),
+                             check_vma=False),
+                   donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_target_views(mesh, params: SubmapParams):
+    """Sharded decode of fleet state to registration-target form. The
+    fp32 layout needs no decode (the service uses its leaves directly);
+    this executable exists for fp16, where the engine's target is
+    ``origin + offset`` per lane — the same ``state_views`` formula the
+    standalone pipeline evaluates, so lanes stay bit-identical."""
+    def body(state_l):
+        pts, valid, _ = jax.vmap(
+            lambda st: state_views(st, params))(state_l)
+        return pts, valid
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(_state_spec(params),),
+                             out_specs=(_SPEC, _SPEC), check_vma=False))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_reset(mesh, params: SubmapParams):
+    """Reset one lane of the sharded fleet state to idle (retire path).
+    Elementwise select along the lane axis — shard-local, no collectives;
+    ``lane`` is traced so every retire reuses one executable."""
+    out_sh = tuple(NamedSharding(mesh, _SPEC) for _ in empty_state(params))
+
+    def run(state_b, lane):
+        idle = empty_state(params)
+        S = state_b[-1].shape[0]
+        hit = jnp.arange(S) == lane
+        return tuple(
+            jnp.where(hit.reshape((S,) + (1,) * (leaf.ndim - 1)),
+                      idle_leaf[None], leaf)
+            for leaf, idle_leaf in zip(state_b, idle))
+
+    return jax.jit(run, donate_argnums=(0,), out_shardings=out_sh)
 
 
 class RegistrationService:
     """Continuous-batching front end over the odometry stack: admit
     streams into slots, stage frames, and run the whole fleet's round as
-    one compiled step (see module docstring for the lifecycle).
+    one compiled step (see module docstring for the lifecycle and the
+    sharded mode).
 
     The service is single-threaded and deterministic: ``step()`` pops at
     most one staged frame per active stream in slot order, so identical
@@ -191,7 +384,41 @@ class RegistrationService:
                              f"got {config.admission!r}")
         cap = bucket_size(config.scan_capacity)
         self.config = config._replace(scan_capacity=cap)
-        self.engine = get_engine("slots", slots=config.slots)
+        self._sharded = config.devices is not None
+        sp = self.stream_config.submap
+        if self._sharded:
+            D = int(config.devices)
+            if D < 1 or D > jax.device_count():
+                raise ValueError(f"devices must be in "
+                                 f"[1, {jax.device_count()}], got {D}")
+            if config.slots % D:
+                raise ValueError(f"slots={config.slots} must divide evenly "
+                                 f"over devices={D}")
+            self.engine = get_engine("sharded-slots",
+                                     lanes_per_device=config.slots // D,
+                                     devices=D)
+            self._mesh = self.engine.mesh
+            self._sharding = self.engine.sharding()
+            # fleet-resident sharded map state: each device holds its lane
+            # block's submaps for the whole service lifetime
+            idle_np = [np.asarray(leaf) for leaf in empty_state(sp)]
+            S = config.slots
+            self._fleet = tuple(
+                jax.device_put(
+                    np.broadcast_to(leaf, (S,) + leaf.shape).copy(),
+                    self._sharding)
+                for leaf in idle_np)
+            # host-side staged-scan fillers (one sharded transfer per round)
+            self._idle_pts = np.full((cap, 3), PAD_SENTINEL, np.float32)
+            self._idle_valid = np.zeros((cap,), bool)
+        else:
+            self.engine = get_engine("slots", slots=config.slots)
+            self._mesh = self._sharding = None
+            self._fleet = None
+            # device-resident idle-lane fillers (staged-scan shaped)
+            self._idle_pts = jnp.full((cap, 3), PAD_SENTINEL, jnp.float32)
+            self._idle_valid = jnp.zeros((cap,), bool)
+        self._idle_state = empty_state(sp)   # one idle lane (map shaped)
         self._streams: dict[str, _Stream] = {}
         self._slots: list[str | None] = [None] * config.slots
         self._pending: deque[str] = deque()
@@ -199,25 +426,53 @@ class RegistrationService:
         self.frames_processed = 0
         self.frames_dropped = 0
         self.cascade_escapes = 0
-        # device-resident idle-lane filler (staged-scan shaped + map shaped)
-        self._idle_pts = jnp.full((cap, 3), PAD_SENTINEL, jnp.float32)
-        self._idle_valid = jnp.zeros((cap,), bool)
-        mcap = int(self.stream_config.submap.capacity)
-        self._idle_map = jnp.full((mcap, 3), PAD_SENTINEL, jnp.float32)
-        self._idle_map_valid = jnp.zeros((mcap,), bool)
-        self._idle_origin = jnp.zeros((3,), jnp.float32)
         self._eye = np.eye(4, dtype=np.float32)
 
     @property
     def stream_config(self) -> OdometryConfig:
         """The per-stream odometry config, normalized onto the shared
-        ``SlotEngine``. A standalone ``OdometryPipeline(stream_config)``
-        is the service's bit-exact single-stream reference."""
+        slot engine (sharded or not). A standalone
+        ``OdometryPipeline(stream_config)`` is the service's bit-exact
+        single-stream reference in either mode."""
+        if self.config.devices is not None:
+            D = int(self.config.devices)
+            return self.config.odometry._replace(
+                engine="sharded-slots",
+                engine_kwargs=(("lanes_per_device", self.config.slots // D),
+                               ("devices", D)))
         return self.config.odometry._replace(
             engine="slots",
             engine_kwargs=(("slots", self.config.slots),))
 
     # -- admission ---------------------------------------------------------
+    def _free_lane(self) -> int | None:
+        """Pick the slot a new stream binds. Single-device: first free.
+        Sharded: first free lane on the least-loaded device block, so
+        live streams spread across the mesh instead of saturating device
+        0's block while the rest idle (ties break toward the lower
+        device index — deterministic)."""
+        if not self._sharded:
+            return next((i for i, s in enumerate(self._slots) if s is None),
+                        None)
+        L = self.config.slots // int(self.config.devices)
+        best = None
+        for d in range(int(self.config.devices)):
+            block = self._slots[d * L:(d + 1) * L]
+            free = next((d * L + i for i, s in enumerate(block)
+                         if s is None), None)
+            if free is None:
+                continue
+            load = sum(1 for s in block if s is not None)
+            if best is None or load < best[0]:
+                best = (load, free)
+        return None if best is None else best[1]
+
+    def _make_stream(self, stream_id: str) -> _Stream:
+        stream = _Stream(stream_id)
+        submap = _LaneSubmap(self, stream) if self._sharded else None
+        stream.pipe = OdometryPipeline(self.stream_config, submap=submap)
+        return stream
+
     def admit(self, stream_id: str) -> bool:
         """Admit a new stream. Returns True if a slot was bound now,
         False if the stream was queued behind a full fleet
@@ -226,9 +481,8 @@ class RegistrationService:
         queued — they stage and wait."""
         if stream_id in self._streams:
             raise ValueError(f"stream {stream_id!r} already admitted")
-        stream = _Stream(stream_id, OdometryPipeline(self.stream_config))
-        lane = next((i for i, s in enumerate(self._slots) if s is None),
-                    None)
+        stream = self._make_stream(stream_id)
+        lane = self._free_lane()
         if lane is None:
             if self.config.admission == "reject":
                 raise RuntimeError(
@@ -246,12 +500,18 @@ class RegistrationService:
         """Retire a stream: free its slot (rebinding the oldest pending
         stream, if any), drop its state, and return the final
         :class:`StreamReport`. Un-stepped staged frames are discarded
-        (counted as dropped)."""
+        (counted as dropped). In sharded mode the lane's resident map
+        state is reset to idle in place — the next stream bound to this
+        slot must never see its predecessor's map."""
         stream = self._streams.pop(stream_id)
         stream.dropped += len(stream.queue)
         self.frames_dropped += len(stream.queue)
         report = self._report(stream)
         if stream.slot is not None:
+            if self._sharded:
+                reset = _sharded_reset(self._mesh, self.stream_config.submap)
+                self._fleet = reset(self._fleet,
+                                    jnp.int32(stream.slot))
             self._slots[stream.slot] = None
             while self._pending:
                 nxt = self._pending.popleft()
@@ -285,19 +545,27 @@ class RegistrationService:
         return padded, pvalid
 
     def submit(self, stream_id: str, scan, valid=None) -> bool:
-        """Stage one sensor-frame scan for ``stream_id``. The padded scan
-        is transferred to the device immediately (JAX dispatch is async,
-        so staging overlaps the in-flight round's compute — the
-        double-buffering half of the transfer story; the fuse's buffer
-        donation is the other half). Returns True if the frame is queued;
-        False if backpressure dropped it (``drop_policy="newest"``).
-        Dropping the *oldest* staged frame still returns True — the
-        submitted frame survived, an older one paid."""
+        """Stage one sensor-frame scan for ``stream_id``. Single-device
+        mode transfers the padded scan to the device immediately (JAX
+        dispatch is async, so staging overlaps the in-flight round's
+        compute — the double-buffering half of the transfer story; the
+        fuse's buffer donation is the other half). Sharded mode stages
+        host-side: the round start issues ONE sharded transfer that
+        lands every lane directly on its owning device, instead of
+        bouncing per-frame copies through the default device. Returns
+        True if the frame is queued; False if backpressure dropped it
+        (``drop_policy="newest"``). Dropping the *oldest* staged frame
+        still returns True — the submitted frame survived, an older one
+        paid."""
         stream = self._streams[stream_id]
         padded, pvalid = self.stage_scan(scan, valid)
-        staged = _StagedFrame(pts=jax.device_put(padded),
-                              valid=jax.device_put(pvalid),
-                              seq=stream.submitted)
+        if self._sharded:
+            staged = _StagedFrame(pts=padded, valid=pvalid,
+                                  seq=stream.submitted)
+        else:
+            staged = _StagedFrame(pts=jax.device_put(padded),
+                                  valid=jax.device_put(pvalid),
+                                  seq=stream.submitted)
         stream.submitted += 1
         if len(stream.queue) >= self.config.max_queue:
             stream.dropped += 1
@@ -309,6 +577,15 @@ class RegistrationService:
         return True
 
     # -- the fleet round ---------------------------------------------------
+    def _stack_states(self, work, S):
+        """Per-round stack of every lane's map state (single-device mode
+        only — sharded mode's fleet state is already device-resident)."""
+        n_leaves = len(self._idle_state)
+        return tuple(
+            jnp.stack([work[i][0].pipe.submap.state[k] if i in work
+                       else self._idle_state[k] for i in range(S)])
+            for k in range(n_leaves))
+
     def step(self) -> dict:
         """Run one service round: pop at most one staged frame per active
         stream (slot order), execute the batched data plane — vmapped
@@ -316,10 +593,13 @@ class RegistrationService:
         per-stream completion, one vmapped fuse — and return
         ``{stream_id: (pose, FrameDiagnostics)}`` for every frame
         processed this round. Streams with empty queues idle at zero
-        marginal device cost (their lanes are mask-dead)."""
+        marginal device cost (their lanes are mask-dead). In sharded
+        mode every stage runs inside the shard body over the streams
+        mesh; the structure is identical."""
         cfg = self.config
         odo = self.stream_config
         S = cfg.slots
+        sharded = self._sharded
         work = {}
         for lane, sid in enumerate(self._slots):
             if sid is None:
@@ -332,12 +612,25 @@ class RegistrationService:
         self.rounds += 1
 
         # 1. staged-scan stack -> vmapped scrub + downsample (data plane)
-        pts_b = jnp.stack([work[i][1].pts if i in work else self._idle_pts
-                           for i in range(S)])
-        valid_b = jnp.stack([work[i][1].valid if i in work
-                             else self._idle_valid for i in range(S)])
-        src_b, sv_b, nv_b = _prepare_batch(pts_b, valid_b, odo.scan_voxel,
-                                           odo.scan_budget)
+        if sharded:
+            pts_b = jax.device_put(
+                np.stack([work[i][1].pts if i in work else self._idle_pts
+                          for i in range(S)]), self._sharding)
+            valid_b = jax.device_put(
+                np.stack([work[i][1].valid if i in work
+                          else self._idle_valid for i in range(S)]),
+                self._sharding)
+            prepare = _sharded_prepare(self._mesh, odo.scan_voxel,
+                                       odo.scan_budget)
+            src_b, sv_b, nv_b = prepare(pts_b, valid_b)
+        else:
+            pts_b = jnp.stack([work[i][1].pts if i in work
+                               else self._idle_pts for i in range(S)])
+            valid_b = jnp.stack([work[i][1].valid if i in work
+                                 else self._idle_valid for i in range(S)])
+            src_b, sv_b, nv_b = _prepare_batch(pts_b, valid_b,
+                                               odo.scan_voxel,
+                                               odo.scan_budget)
         n_valid = np.asarray(nv_b)
 
         # 2. host classification: which lanes register this round
@@ -354,16 +647,28 @@ class RegistrationService:
             # 3. one fleet registration through the slot executable
             active = np.zeros((S,), bool)
             active[reg_lanes] = True
-            active_d = jnp.asarray(active)
-            dst_b = jnp.stack([
-                work[i][0].pipe.submap.points if i in work
-                else self._idle_map for i in range(S)])
-            dv_b = jnp.stack([
-                work[i][0].pipe.submap.valid if i in work
-                else self._idle_map_valid for i in range(S)])
-            origin_b = jnp.stack([
-                work[i][0].pipe.submap.origin if i in work
-                else self._idle_origin for i in range(S)])
+            if sharded:
+                active_d = jax.device_put(active, self._sharding)
+                sub = self.stream_config.submap
+                if sub.storage == "fp32":
+                    dst_b, dv_b = self._fleet[0], self._fleet[1]
+                else:
+                    views = _sharded_target_views(self._mesh, sub)
+                    dst_b, dv_b = views(self._fleet)
+                origin_b = self._fleet[-1]
+            else:
+                active_d = jnp.asarray(active)
+                dst_b = jnp.stack([
+                    work[i][0].pipe.submap.points if i in work
+                    else state_views(self._idle_state, odo.submap)[0]
+                    for i in range(S)])
+                dv_b = jnp.stack([
+                    work[i][0].pipe.submap.valid if i in work
+                    else state_views(self._idle_state, odo.submap)[1]
+                    for i in range(S)])
+                origin_b = jnp.stack([
+                    work[i][0].pipe.submap.origin if i in work
+                    else self._idle_state[-1] for i in range(S)])
             T0_b = np.stack([preps[i].T0 if i in preps else self._eye
                              for i in range(S)])
             res = self.engine.register_batch(
@@ -372,8 +677,12 @@ class RegistrationService:
                 dst_valid=jnp.logical_and(dv_b, active_d[:, None]),
                 initial_transforms=T0_b)
             # 4. batched health probe + ONE bulk device->host fetch
-            lat_b = _lattice_batch(res.T, src_b, sv_b, origin_b,
-                                   odo.submap)
+            if sharded:
+                probe = _sharded_lattice(self._mesh, odo.submap)
+                lat_b = probe(res.T, src_b, sv_b, origin_b)
+            else:
+                lat_b = _lattice_batch(res.T, src_b, sv_b, origin_b,
+                                       odo.submap)
             res_host, lat_host = jax.device_get((res, lat_b))
 
         # 5. host control plane: per-stream completion (cascade, accept,
@@ -389,7 +698,8 @@ class RegistrationService:
             else:
                 lane_res, lat = None, None
             pose, diag, fuse_req = stream.pipe.complete_frame(
-                prep, lane_res, lattice_frac=lat, defer_fuse=True)
+                prep, lane_res, lattice_frac=lat, defer_fuse=True,
+                defer_bootstrap=sharded)
             if prep.kind == KIND_REGISTER and diag.recovery_tier > 0:
                 stream.cascade_escapes += 1
                 self.cascade_escapes += 1
@@ -402,32 +712,51 @@ class RegistrationService:
         if fuse_reqs:
             accept = np.zeros((S,), bool)
             accept[list(fuse_reqs)] = True
-            fp_b, fv_b, fo_b, occ_b = _fuse_batch(
-                jnp.stack([work[i][0].pipe.submap.points if i in work
-                           else self._idle_map for i in range(S)]),
-                jnp.stack([work[i][0].pipe.submap.valid if i in work
-                           else self._idle_map_valid for i in range(S)]),
-                jnp.stack([work[i][0].pipe.submap.origin if i in work
-                           else self._idle_origin for i in range(S)]),
-                jnp.stack([fuse_reqs[i].src if i in fuse_reqs
-                           else src_b[i] for i in range(S)]),
-                jnp.stack([fuse_reqs[i].sv if i in fuse_reqs
-                           else sv_b[i] for i in range(S)]),
-                jnp.asarray(np.stack([fuse_reqs[i].pose if i in fuse_reqs
-                                      else self._eye for i in range(S)])),
-                jnp.asarray(accept), odo.submap)
-            occ = np.asarray(occ_b)
+            pose_np = np.stack([fuse_reqs[i].pose if i in fuse_reqs
+                                else self._eye for i in range(S)])
             mcap = int(odo.submap.capacity)
-            for lane, req in fuse_reqs.items():
-                stream = work[lane][0]
-                sub = stream.pipe.submap
-                sub.points, sub.valid = fp_b[lane], fv_b[lane]
-                sub.origin = fo_b[lane]
-                sub.frames_inserted += 1
-                pose, diag = outputs[stream.id]
-                diag = stream.pipe.amend_diagnostics(
-                    diag.frame, map_occupancy=float(occ[lane]) / mcap)
-                outputs[stream.id] = (pose, diag)
+            if sharded:
+                # the fuse sources ARE this round's prepared batch
+                # (every FuseRequest.src is its lane's src_b slice)
+                fuse = _sharded_fuse(self._mesh, odo.submap)
+                self._fleet, occ_b, drop_b = fuse(
+                    self._fleet, src_b, sv_b,
+                    jax.device_put(pose_np, self._sharding),
+                    jax.device_put(accept, self._sharding))
+                occ, drop = np.asarray(occ_b), np.asarray(drop_b)
+                for lane, req in fuse_reqs.items():
+                    stream = work[lane][0]
+                    view = stream.pipe.submap
+                    view.frames_inserted += 1
+                    view._occupied = int(occ[lane])
+                    view.dropped_cells += int(drop[lane])
+                    pose, diag = outputs[stream.id]
+                    diag = stream.pipe.amend_diagnostics(
+                        diag.frame,
+                        map_occupancy=float(occ[lane]) / mcap,
+                        dropped_cells=view.dropped_cells)
+                    outputs[stream.id] = (pose, diag)
+            else:
+                state_b, occ_b, drop_b = _fuse_batch(
+                    self._stack_states(work, S),
+                    jnp.stack([fuse_reqs[i].src if i in fuse_reqs
+                               else src_b[i] for i in range(S)]),
+                    jnp.stack([fuse_reqs[i].sv if i in fuse_reqs
+                               else sv_b[i] for i in range(S)]),
+                    jnp.asarray(pose_np), jnp.asarray(accept), odo.submap)
+                occ, drop = np.asarray(occ_b), np.asarray(drop_b)
+                for lane, req in fuse_reqs.items():
+                    stream = work[lane][0]
+                    sub = stream.pipe.submap
+                    sub.state = tuple(leaf[lane] for leaf in state_b)
+                    sub.frames_inserted += 1
+                    sub.dropped_cells += int(drop[lane])
+                    pose, diag = outputs[stream.id]
+                    diag = stream.pipe.amend_diagnostics(
+                        diag.frame,
+                        map_occupancy=float(occ[lane]) / mcap,
+                        dropped_cells=sub.dropped_cells)
+                    outputs[stream.id] = (pose, diag)
         return outputs
 
     def sync(self) -> None:
@@ -435,10 +764,13 @@ class RegistrationService:
         (registration, fuse writebacks) has completed. Outputs returned by
         ``step`` are already host-side; this exists for benchmarks that
         must charge the async fuse tail to the round that issued it."""
+        if self._sharded:
+            jax.block_until_ready(self._fleet)
+            return
         for sid in self._slots:
             if sid is not None:
                 sub = self._streams[sid].pipe.submap
-                jax.block_until_ready((sub.points, sub.valid))
+                jax.block_until_ready(sub.state)
 
     def drain(self, max_rounds: int | None = None) -> dict:
         """Step until every active stream's queue is empty (or
@@ -475,7 +807,8 @@ class RegistrationService:
 
     def service_report(self) -> dict:
         """Fleet-level counters: rounds run, frames processed/dropped,
-        cascade escapes, live/pending stream counts, and the slot
+        cascade escapes, live/pending stream counts, the device count the
+        fleet is sharded over (1 = single-device mode), and the slot
         engine's trace count (constant after warmup = the retrace-free
         invariant)."""
         return {
@@ -485,6 +818,7 @@ class RegistrationService:
             "cascade_escapes": self.cascade_escapes,
             "active_streams": sum(1 for s in self._slots if s is not None),
             "pending_streams": len(self._pending),
+            "devices": (int(self.config.devices) if self._sharded else 1),
             "trace_count": self.engine.trace_count,
         }
 

@@ -227,3 +227,121 @@ def test_oversized_scan_rejected_at_submit():
     big = np.zeros((svc.config.scan_capacity + 1, 3), np.float32)
     with pytest.raises(ValueError, match="exceeds"):
         svc.submit("veh0", big)
+
+
+# -- device-sharded mode ---------------------------------------------------
+# D=1 here (single-device CI interpreter); tests/test_multidevice.py runs
+# the same contracts on an 8-device host-platform fleet in a subprocess.
+
+def _sharded_service(**over):
+    over.setdefault("odometry", ODO)
+    cfg = ServiceConfig(slots=SLOTS, scan_capacity=1024, devices=1, **over)
+    return RegistrationService(cfg)
+
+
+def test_sharded_service_matches_standalone_pipeline_bitwise():
+    """The weak-scaling parity contract at its D=1 corner: the shard_map'd
+    round (sharded fleet state, host staging, batched fuse into resident
+    submaps) reproduces a standalone replay bit for bit — poses AND
+    diagnostics."""
+    svc = _sharded_service()
+    fleet = _fleet_scans(3, 5)
+    for sid in fleet:
+        svc.admit(sid)
+    staged = {sid: [svc.stage_scan(sc) for sc in scans]
+              for sid, scans in fleet.items()}
+    out = _drive(svc, fleet)
+    for sid, frames in staged.items():
+        ref = OdometryPipeline(svc.stream_config)
+        for f, (padded, valid) in enumerate(frames):
+            pose_ref, diag_ref = ref.process(padded, valid)
+            pose_svc, diag_svc = out[sid][f]
+            np.testing.assert_array_equal(np.asarray(pose_svc),
+                                          np.asarray(pose_ref))
+            assert diag_svc == diag_ref
+
+
+def test_sharded_churn_never_retraces():
+    """Joins, retires (with in-place lane resets), drops, and empty
+    queues: the sharded executables are fixed-shape too, so churn never
+    grows the trace count."""
+    svc = _sharded_service(max_queue=1)
+    fleet = _fleet_scans(2, 2)
+    for sid in fleet:
+        svc.admit(sid)
+    _drive(svc, fleet)
+    traces = svc.engine.trace_count
+    svc.admit("joiner")
+    scans = sequence_scans(5, 4, SCENE)
+    for f in range(4):
+        svc.submit("joiner", scans[f])
+        svc.submit("joiner", scans[f])
+        svc.step()
+    svc.close("veh0")                    # lane reset + empty slot round
+    svc.step()
+    assert svc.frames_dropped > 0
+    assert svc.engine.trace_count == traces
+
+
+def test_sharded_close_resets_lane_state():
+    """A stream bound to a retired stream's slot must never see its
+    predecessor's resident submap: the successor's whole trajectory
+    replays bit-identically against a fresh standalone pipeline (stale
+    fleet state would poison its bootstrap fuse and every frame after)."""
+    svc = _sharded_service()
+    fleet = _fleet_scans(SLOTS, 3)
+    for sid in fleet:
+        svc.admit(sid)
+    _drive(svc, fleet)
+    freed = svc._streams["veh0"].slot
+    svc.close("veh0")
+    svc.admit("fresh")
+    assert svc._streams["fresh"].slot == freed   # the lane is reused
+    scans = sequence_scans(11, 3, SCENE)
+    staged = [svc.stage_scan(sc) for sc in scans]
+    out = _drive(svc, {"fresh": scans})
+    ref = OdometryPipeline(svc.stream_config)
+    for f, (padded, valid) in enumerate(staged):
+        pose_ref, diag_ref = ref.process(padded, valid)
+        np.testing.assert_array_equal(np.asarray(out["fresh"][f][0]),
+                                      np.asarray(pose_ref))
+        assert out["fresh"][f][1] == diag_ref
+
+
+def test_fp16_sharded_service_matches_fp16_standalone():
+    """Memory-lean resident submaps through the sharded service: the
+    fp16 fleet round is still bit-identical to an fp16 standalone replay
+    (both decode, fuse in fp32, re-encode through the same code path)."""
+    odo16 = ODO._replace(submap=ODO.submap._replace(storage="fp16"))
+    svc = _sharded_service(odometry=odo16)
+    fleet = _fleet_scans(2, 4)
+    for sid in fleet:
+        svc.admit(sid)
+    staged = {sid: [svc.stage_scan(sc) for sc in scans]
+              for sid, scans in fleet.items()}
+    out = _drive(svc, fleet)
+    for sid, frames in staged.items():
+        ref = OdometryPipeline(svc.stream_config)
+        for f, (padded, valid) in enumerate(frames):
+            pose_ref, diag_ref = ref.process(padded, valid)
+            np.testing.assert_array_equal(np.asarray(out[sid][f][0]),
+                                          np.asarray(pose_ref))
+            assert out[sid][f][1] == diag_ref
+
+
+def test_dropped_cells_surface_in_service_diagnostics():
+    """A capacity-starved stream's saturation is visible per frame in
+    FrameDiagnostics.dropped_cells, identically in the service round and
+    the standalone replay (legacy single-device mode)."""
+    odo_tiny = ODO._replace(submap=ODO.submap._replace(capacity=64))
+    svc = RegistrationService(ServiceConfig(slots=SLOTS, scan_capacity=1024,
+                                            odometry=odo_tiny))
+    svc.admit("veh0")
+    scans = sequence_scans(0, 2, SCENE)
+    staged = [svc.stage_scan(sc) for sc in scans]
+    out = _drive(svc, {"veh0": scans})
+    ref = OdometryPipeline(svc.stream_config)
+    diags_ref = [ref.process(p, v)[1] for p, v in staged]
+    assert out["veh0"][0][1].dropped_cells > 0   # bootstrap already drops
+    for (_, diag_svc), diag_ref in zip(out["veh0"], diags_ref):
+        assert diag_svc == diag_ref
