@@ -5,7 +5,9 @@
 #   make test-chaos  fault-injection chaos streams (marker: chaos)
 #   make test-multidevice  sharded fleet on a forced 8-device host platform
 #   make test-all    full tier-1 suite, including slow + chaos tests
-#   make lint        ruff (pyproject [tool.ruff]); stdlib fallback offline
+#   make lint        ruff (pyproject [tool.ruff]); stdlib fallback offline;
+#                    plus docstring coverage and tools/tracecheck.py
+#   make tracecheck  trace-safety & kernel-contract static analysis only
 #   make bench       full benchmark harness (writes BENCH_*.json)
 #   make bench-smoke every benchmark entry point in smoke mode
 #   make bench-guard re-run quick sweeps, fail on >20% metric regression
@@ -15,8 +17,8 @@
 
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test test-chaos test-multidevice test-all lint bench \
-        bench-smoke bench-guard
+.PHONY: check test test-chaos test-multidevice test-all lint tracecheck \
+        bench bench-smoke bench-guard
 
 check: lint test bench-smoke
 
@@ -37,6 +39,10 @@ test-all:
 
 lint:
 	python tools/lint.py
+	python tools/tracecheck.py
+
+tracecheck:
+	python tools/tracecheck.py
 
 bench:
 	python -m benchmarks.run

@@ -77,7 +77,8 @@ def _perturbed_source(dst: np.ndarray, mag: float, samples: int,
     T_gt[:3, 3] = [0.8 * mag, 0.6 * mag, 0.1 * mag]
     sel = rng.choice(dst.shape[0], min(samples, dst.shape[0]), replace=False)
     src = np.asarray(transform_points(
-        jnp.linalg.inv(jnp.asarray(T_gt)), jnp.asarray(dst[sel]))).copy()
+        jnp.linalg.inv(jnp.asarray(T_gt, jnp.float32)),
+        jnp.asarray(dst[sel]))).copy()
     src += rng.normal(0.0, 0.01, src.shape).astype(np.float32)
     return src, T_gt
 

@@ -47,7 +47,8 @@ QUICK_SIZES = (4_096, 16_384)
 def _sweep_case(src, dst, *, max_per_cell, grid_dims, gate=1.0,
                 voxel=1.0, rings=1, warmup=1, iters=2, d2_brute=None,
                 t_brute=None):
-    srcj, dstj = jnp.asarray(src), jnp.asarray(dst)
+    srcj = jnp.asarray(src, jnp.float32)
+    dstj = jnp.asarray(dst, jnp.float32)
     if d2_brute is None:
         brute = jax.jit(lambda s, d: nn_search(s, d, chunk=2048))
         t_brute = timeit(brute, srcj, dstj, warmup=warmup, iters=iters)

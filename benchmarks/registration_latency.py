@@ -50,7 +50,8 @@ def stage_breakdown(src, dst, params: ICPParams, grid_dims=(128, 128, 32)):
     loop doesn't pay, so treat the absolute sum as an upper bound; the
     *ratios* are the point.
     """
-    srcj, dstj = jnp.asarray(src), jnp.asarray(dst)
+    srcj = jnp.asarray(src, jnp.float32)
+    dstj = jnp.asarray(dst, jnp.float32)
     rows = []
     corr = jax.jit(lambda s, d: nn_search(s, d, chunk=params.chunk))
     t_corr = timeit(corr, srcj, dstj)
@@ -176,7 +177,8 @@ def run(n_seqs: int = 5, samples: int = 2048, iters: int = 50, scene=None):
     jitted = jax.jit(lambda s, d: icp_fixed_iterations(s, d, params))
     for seq, (src, dst, _) in enumerate(frames):
         t_base = timeit(lambda: kdtree_icp(src, dst, iters), warmup=0, iters=1)
-        srcj, dstj = jnp.asarray(src), jnp.asarray(dst)
+        srcj = jnp.asarray(src, jnp.float32)
+        dstj = jnp.asarray(dst, jnp.float32)
         t_ours = timeit(lambda: jitted(srcj, dstj), warmup=1, iters=2)
         t_proj = _project_v5e_frame_s(src.shape[0], dst.shape[0], iters)
         acc_meas = t_base / t_ours

@@ -131,8 +131,8 @@ def run(batch: int = 16, n: int = 128, m: int = 256, iters: int = 8,
 
     # -- batched path: one compiled program for the whole stack ------------
     engine = get_engine("xla", chunk=params.chunk)
-    src_b = jnp.stack([jnp.asarray(s) for s, _ in pairs])
-    dst_b = jnp.stack([jnp.asarray(d) for _, d in pairs])
+    src_b = jnp.stack([jnp.asarray(s, jnp.float32) for s, _ in pairs])
+    dst_b = jnp.stack([jnp.asarray(d, jnp.float32) for _, d in pairs])
     res = engine.register_batch(src_b, dst_b, params)    # warmup
     jax.block_until_ready(res.T)
     times = []

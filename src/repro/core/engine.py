@@ -201,8 +201,8 @@ class RegistrationEngine:
         return fn(jnp.asarray(sources, dtype=jnp.float32),
                   jnp.asarray(targets, dtype=jnp.float32),
                   initial_transforms,
-                  None if src_valid is None else jnp.asarray(src_valid),
-                  None if dst_valid is None else jnp.asarray(dst_valid))
+                  None if src_valid is None else jnp.asarray(src_valid, bool),
+                  None if dst_valid is None else jnp.asarray(dst_valid, bool))
 
     def register_pairs(self, pairs, params: ICPParams | None = None,
                        initial_transforms=None):

@@ -534,7 +534,8 @@ class OdometryPipeline:
                         fuse_req = FuseRequest(src=src, sv=sv, pose=pose)
                     else:
                         self.submap.insert(
-                            transform_points(jnp.asarray(pose), src),
+                            transform_points(jnp.asarray(pose, jnp.float32),
+                                             src),
                             center=pose[:3, 3], valid=sv)
             else:
                 pose = np.asarray(T0, np.float32)

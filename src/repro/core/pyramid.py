@@ -218,9 +218,8 @@ class PyramidEngine(RegistrationEngine):
         self._interpret = interpret
 
     def _interp(self) -> bool:
-        if self._interpret is None:
-            return jax.default_backend() != "tpu"
-        return self._interpret
+        from repro.kernels.common import default_interpret
+        return default_interpret(self._interpret)
 
     def _pyramid_kwargs(self):
         return dict(levels=self._levels, grid_dims=self._grid_dims,

@@ -239,14 +239,17 @@ class Submap:
     # -- decoded views -----------------------------------------------------
     @property
     def points(self) -> jax.Array:
+        """Decoded (capacity, 3) f32 cell centroids (invalid rows junk)."""
         return state_views(self.state, self.params)[0]
 
     @property
     def valid(self) -> jax.Array:
+        """(capacity,) bool mask of occupied cells."""
         return state_views(self.state, self.params)[1]
 
     @property
     def origin(self) -> jax.Array:
+        """Lattice anchor of the rolling window, (3,) f32 world coords."""
         return self.state[-1]
 
     # -- registration-target views ----------------------------------------

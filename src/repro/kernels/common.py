@@ -19,12 +19,14 @@ import jax
 
 
 def round_up(x: int, mult: int) -> int:
+    """Smallest multiple of ``mult`` that is >= ``x`` (tile padding)."""
     return x + (-x) % mult
 
 
 def default_interpret(interpret: bool | None = None) -> bool:
     """Resolve the tri-state ``interpret`` flag (see module docstring)."""
     if interpret is None:
+        # tracecheck: ignore[PK001]  # this IS the single blessed home
         return jax.default_backend() != "tpu"
     return bool(interpret)
 

@@ -657,7 +657,7 @@ class RegistrationService:
                     dst_b, dv_b = views(self._fleet)
                 origin_b = self._fleet[-1]
             else:
-                active_d = jnp.asarray(active)
+                active_d = jnp.asarray(active, bool)
                 dst_b = jnp.stack([
                     work[i][0].pipe.submap.points if i in work
                     else state_views(self._idle_state, odo.submap)[0]
@@ -743,7 +743,8 @@ class RegistrationService:
                                else src_b[i] for i in range(S)]),
                     jnp.stack([fuse_reqs[i].sv if i in fuse_reqs
                                else sv_b[i] for i in range(S)]),
-                    jnp.asarray(pose_np), jnp.asarray(accept), odo.submap)
+                    jnp.asarray(pose_np, jnp.float32),
+                    jnp.asarray(accept, bool), odo.submap)
                 occ, drop = np.asarray(occ_b), np.asarray(drop_b)
                 for lane, req in fuse_reqs.items():
                     stream = work[lane][0]

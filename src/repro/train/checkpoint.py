@@ -105,6 +105,7 @@ def restore(path: str | os.PathLike, abstract_state, step: int | None = None,
                              f"expected {expect}")
         arr = arr.astype(leaf.dtype)
         leaves.append(jax.device_put(arr, sh) if sh is not None
+                      # tracecheck: ignore[TS004]  # dtype restored from leaf
                       else jax.numpy.asarray(arr))
     state = jax.tree_util.tree_unflatten(treedef, leaves)
     manifest = json.loads((ckpt / "manifest.json").read_text())

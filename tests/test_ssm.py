@@ -85,7 +85,7 @@ def test_mamba2_ragged_seq_padding_exact():
     _, (_, st_ragged) = mamba2_forward(params, u[:, :41], cfg,
                                        return_state=True)
     y_n, st_ref = None, None
-    from repro.models.ssm import _causal_conv, _split_proj  # noqa
+    from repro.models.ssm import _causal_conv, _split_proj  # noqa: F401
     # reference: run naive over 41 steps via decode loop
     state = mamba2_init_state(1, cfg)
     for t in range(41):

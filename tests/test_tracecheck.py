@@ -1,0 +1,476 @@
+"""Fixture tests for tools/tracecheck.py (ISSUE-10).
+
+Every rule gets one minimal true-positive and one near-miss
+false-positive guard, as in-memory source snippets through
+``analyze_source``. Plus: the repo-wide sweep stays clean against the
+committed (empty) baseline, suppressions and the baseline round-trip,
+and the two named regression demos — re-introducing the PR-6
+hand-rolled interpret check and an array-valued engine cache key are
+both caught.
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import pathlib
+import sys
+import textwrap
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "tracecheck", ROOT / "tools" / "tracecheck.py")
+tc = importlib.util.module_from_spec(_spec)
+sys.modules["tracecheck"] = tc  # dataclasses resolves module globals
+_spec.loader.exec_module(tc)
+
+
+def rules_of(src: str) -> list[str]:
+    return [f.rule for f in tc.analyze_source(textwrap.dedent(src))]
+
+
+# ---------------------------------------------------------------------------
+# TS001 — python control flow on traced values
+
+
+def test_ts001_if_on_traced_value_in_jit():
+    src = """
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def f(x):
+        if x > 0:
+            return x
+        while jnp.sum(x) > 1.0:
+            x = x * 0.5
+        return -x
+    """
+    assert rules_of(src).count("TS001") == 2
+
+
+def test_ts001_static_branches_are_clean():
+    src = """
+    from functools import partial
+
+    import jax
+
+    @partial(jax.jit, static_argnames=("mode",))
+    def f(x, mode, y=None):
+        if y is None:
+            y = x
+        if mode == "fast":
+            return x + y
+        if x.shape[0] > 128:
+            return x[:128] + y[:128]
+        return x - y
+    """
+    assert "TS001" not in rules_of(src)
+
+
+def test_ts001_helper_inherits_traced_scope_interprocedurally():
+    src = """
+    import jax
+
+    def helper(x: jax.Array):
+        if x > 0:
+            return x
+        return -x
+
+    @jax.jit
+    def f(x):
+        return helper(x)
+    """
+    assert "TS001" in rules_of(src)
+
+
+def test_ts001_helper_with_host_caller_not_inherited():
+    src = """
+    import jax
+
+    def helper(x: jax.Array):
+        if x > 0:
+            return x
+        return -x
+
+    @jax.jit
+    def f(x):
+        return helper(x)
+
+    def host_path(arr):
+        return helper(arr)
+    """
+    assert "TS001" not in rules_of(src)
+
+
+# ---------------------------------------------------------------------------
+# TS002 — implicit host syncs inside traced scopes
+
+
+def test_ts002_float_and_item_on_traced():
+    src = """
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def f(x):
+        s = float(jnp.sum(x))
+        t = jnp.max(x).item()
+        return x * s * t
+    """
+    assert rules_of(src).count("TS002") == 2
+
+
+def test_ts002_static_shape_conversion_is_clean():
+    src = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        s = float(x.shape[0])
+        return x * s
+    """
+    assert "TS002" not in rules_of(src)
+
+
+# ---------------------------------------------------------------------------
+# TS003 — unhashable / array-valued static or cache keys
+
+
+def test_ts003_array_valued_engine_cache_key_caught():
+    # the named regression demo: an engine cache keyed on an array value
+    src = """
+    import jax.numpy as jnp
+
+    class Engine:
+        def __init__(self):
+            self._cache = {}
+
+        def executable(self, kind, gate):
+            key = (kind, jnp.asarray(gate, jnp.float32))
+            if key not in self._cache:
+                self._cache[key] = object()
+            return self._cache[key]
+    """
+    assert "TS003" in rules_of(src)
+
+
+def test_ts003_hashable_params_key_is_clean():
+    src = """
+    class Engine:
+        def __init__(self):
+            self._cache = {}
+
+        def executable(self, kind, params):
+            key = (kind, params)
+            if key not in self._cache:
+                self._cache[key] = object()
+            return self._cache[key]
+    """
+    assert "TS003" not in rules_of(src)
+
+
+def test_ts003_array_annotated_static_argname():
+    src = """
+    from functools import partial
+
+    import jax
+
+    @partial(jax.jit, static_argnames=("w",))
+    def f(x, w: jax.Array):
+        return x * w
+    """
+    assert "TS003" in rules_of(src)
+
+
+# ---------------------------------------------------------------------------
+# TS004 — unpinned dtype at a trace boundary
+
+
+def test_ts004_unpinned_asarray_of_host_value():
+    src = """
+    import jax.numpy as jnp
+
+    def load(batch):
+        return jnp.asarray(batch)
+    """
+    assert "TS004" in rules_of(src)
+
+
+def test_ts004_pinned_or_already_traced_is_clean():
+    src = """
+    import jax
+    import jax.numpy as jnp
+
+    def load(batch):
+        return jnp.asarray(batch, jnp.float32)
+
+    def passthrough(x: jax.Array):
+        return jnp.asarray(x)
+    """
+    assert "TS004" not in rules_of(src)
+
+
+# ---------------------------------------------------------------------------
+# TS005 — donated buffer read after the donating call
+
+
+def test_ts005_read_after_donation():
+    src = """
+    import jax
+
+    def _step(state, batch):
+        return state
+
+    step = jax.jit(_step, donate_argnums=(0,))
+
+    def run(state, batch):
+        out = step(state, batch)
+        return state, out
+    """
+    assert "TS005" in rules_of(src)
+
+
+def test_ts005_rebinding_result_is_clean():
+    src = """
+    import jax
+
+    def _step(state, batch):
+        return state, 0.0
+
+    step = jax.jit(_step, donate_argnums=(0,))
+
+    def run(state, batches):
+        for batch in batches:
+            state, loss = step(state, batch)
+        return state
+    """
+    assert "TS005" not in rules_of(src)
+
+
+# ---------------------------------------------------------------------------
+# TS006 — print() inside a traced scope
+
+
+def test_ts006_print_under_jit():
+    src = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        print("tracing", x)
+        return x
+    """
+    assert "TS006" in rules_of(src)
+
+
+def test_ts006_host_print_is_clean():
+    src = """
+    def report(loss):
+        print("loss", loss)
+    """
+    assert "TS006" not in rules_of(src)
+
+
+# ---------------------------------------------------------------------------
+# PK001 — pallas_call plumbing + hand-rolled backend checks
+
+
+def test_pk001_bypassing_common_kwargs_and_explicit_interpret():
+    src = """
+    from jax.experimental import pallas as pl
+
+    def launch(kernel, x):
+        return pl.pallas_call(kernel, out_shape=x, interpret=True)(x)
+    """
+    assert rules_of(src).count("PK001") == 2
+
+
+def test_pk001_reintroduced_pr6_backend_check_caught():
+    # the named regression demo: the hand-rolled interpret resolution
+    # that PR 6 removed from the kernel launchers
+    src = """
+    import jax
+
+    class Launcher:
+        def _interp(self):
+            if self._interpret is None:
+                return jax.default_backend() != "tpu"
+            return self._interpret
+    """
+    assert "PK001" in rules_of(src)
+
+
+def test_pk001_common_plumbing_and_metadata_read_are_clean():
+    src = """
+    import jax
+    from jax.experimental import pallas as pl
+
+    from repro.kernels.common import pallas_call_kwargs
+
+    def launch(kernel, x):
+        return pl.pallas_call(
+            kernel, out_shape=x,
+            **pallas_call_kwargs(None, ("parallel",)))(x)
+
+    def bench_metadata():
+        return {"backend": jax.default_backend()}
+    """
+    assert "PK001" not in rules_of(src)
+
+
+# ---------------------------------------------------------------------------
+# PK002 — BlockSpec/grid contract mismatches
+
+
+def test_pk002_index_map_arity_mismatch():
+    src = """
+    from jax.experimental import pallas as pl
+
+    from repro.kernels.common import pallas_call_kwargs
+
+    def launch(kernel, x):
+        spec = pl.BlockSpec((128, 128), lambda i: (i, 0))
+        return pl.pallas_call(
+            kernel, grid=(4, 4), in_specs=[spec], out_specs=spec,
+            **pallas_call_kwargs(None, None))(x)
+    """
+    assert "PK002" in rules_of(src)
+
+
+def test_pk002_matching_contract_is_clean():
+    src = """
+    from jax.experimental import pallas as pl
+
+    from repro.kernels.common import pallas_call_kwargs
+
+    def launch(kernel, x):
+        spec = pl.BlockSpec((128, 128), lambda i, j: (i, j))
+        return pl.pallas_call(
+            kernel, grid=(4, 4), in_specs=[spec], out_specs=spec,
+            **pallas_call_kwargs(None, None))(x)
+    """
+    assert "PK002" not in rules_of(src)
+
+
+# ---------------------------------------------------------------------------
+# PK003 — static VMEM footprint vs the modeled budget
+
+
+def test_pk003_oversized_blocks_flagged():
+    src = """
+    from jax.experimental import pallas as pl
+
+    from repro.kernels.common import pallas_call_kwargs
+
+    def launch(kernel, x, bn=8192, bc=8192):
+        spec = pl.BlockSpec((bn, bc), lambda i, j: (i, j))
+        return pl.pallas_call(
+            kernel, grid=(4, 4), in_specs=[spec], out_specs=spec,
+            **pallas_call_kwargs(None, None))(x)
+    """
+    assert "PK003" in rules_of(src)
+
+
+def test_pk003_fitting_blocks_clean():
+    src = """
+    from jax.experimental import pallas as pl
+
+    from repro.kernels.common import pallas_call_kwargs
+
+    def launch(kernel, x, bn=512, bc=256):
+        spec = pl.BlockSpec((bn, bc), lambda i, j: (i, j))
+        return pl.pallas_call(
+            kernel, grid=(4, 4), in_specs=[spec], out_specs=spec,
+            **pallas_call_kwargs(None, None))(x)
+    """
+    assert "PK003" not in rules_of(src)
+
+
+# ---------------------------------------------------------------------------
+# suppressions, TC000 hygiene, baseline round-trip
+
+
+def test_suppression_with_reason_silences_finding():
+    src = """
+    import jax.numpy as jnp
+
+    def load(batch):
+        return jnp.asarray(batch)  # tracecheck: ignore[TS004]  # raw feed
+    """
+    assert rules_of(src) == []
+
+
+def test_suppression_on_comment_line_above_applies_to_next_line():
+    src = """
+    import jax.numpy as jnp
+
+    def load(batch):
+        # tracecheck: ignore[TS004]  # dtype owned by the caller
+        return jnp.asarray(batch)
+    """
+    assert rules_of(src) == []
+
+
+def test_tc000_suppression_without_reason_flagged():
+    src = """
+    import jax.numpy as jnp
+
+    def load(batch):
+        return jnp.asarray(batch)  # tracecheck: ignore[TS004]
+    """
+    assert rules_of(src) == ["TC000"]
+
+
+def test_suppression_for_other_rule_does_not_apply():
+    src = """
+    import jax.numpy as jnp
+
+    def load(batch):
+        return jnp.asarray(batch)  # tracecheck: ignore[TS001]  # wrong id
+    """
+    assert "TS004" in rules_of(src)
+
+
+def test_baseline_round_trip(tmp_path):
+    src = textwrap.dedent("""
+    import jax.numpy as jnp
+
+    def load(batch):
+        return jnp.asarray(batch)
+    """)
+    findings = tc.analyze_source(src, path="pkg/mod.py")
+    assert findings
+    bl = tmp_path / "baseline.json"
+    tc.write_baseline(findings, bl)
+    fingerprints = tc.load_baseline(bl)
+    assert {f.fingerprint for f in findings} <= fingerprints
+    # a baselined finding no longer counts as new
+    assert [f for f in findings if f.fingerprint not in fingerprints] == []
+    # fingerprints are line-content based: pure line drift doesn't churn
+    drifted = tc.analyze_source("\n\n" + src, path="pkg/mod.py")
+    assert {f.fingerprint for f in drifted} <= fingerprints
+
+
+def test_committed_baseline_is_empty():
+    data = json.loads(
+        (ROOT / "tools" / "tracecheck_baseline.json").read_text())
+    assert data["findings"] == []
+
+
+def test_repo_wide_sweep_is_clean():
+    modules = tc.load_modules()
+    assert len(modules) > 50  # src + benchmarks + tools really scanned
+    findings, _suppressed = tc.analyze_modules(modules)
+    baseline = tc.load_baseline()
+    new = [f for f in findings if f.fingerprint not in baseline]
+    assert new == [], "\n".join(
+        f"{f.path}:{f.line}: {f.rule} {f.message}" for f in new)
+
+
+def test_rule_registry_complete():
+    # >= 8 rules shipped, each with severity and title
+    assert len([r for r in tc.RULES if r != "TC000"]) >= 8
+    for rule, (severity, title) in tc.RULES.items():
+        assert severity in ("error", "warning")
+        assert title

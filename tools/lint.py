@@ -13,6 +13,8 @@ implementation of the same rule set:
   F401  imported but unused (respects ``__all__`` and ``# noqa``)
   I001  unsorted/unsectioned imports (simplified: module-level order and
         stdlib / third-party / first-party section separation)
+  PGH004  blanket ``# noqa`` with no rule code — a suppression that
+        hides *everything* on the line documents nothing; name the rule
 
 The fallback is deliberately a *subset* interpreter of the ruff config —
 anything it flags, ruff flags too — so a green fallback run is a sound
@@ -21,19 +23,25 @@ local approximation and the CI job stays the source of truth.
 Independently of which linter runs, the *docstring coverage* check below
 (D100/D101/D103-lite: every public module / class / function in the
 service surface — ``serve/``, ``core/engine.py``, ``data/collate.py`` —
-must carry a docstring) always executes: ruff's D rules are not
-configured in pyproject, so this check is the single source of truth in
-both environments.
+plus the kernel/submap contract modules ``kernels/common.py`` and
+``data/submap.py`` must carry a docstring) always executes: ruff's D
+rules are not configured in pyproject, so this check is the single
+source of truth in both environments.
+
+Trace-safety and Pallas kernel contracts are the third lint pillar and
+live in their own pass: ``tools/tracecheck.py`` (run by ``make lint``).
 """
 from __future__ import annotations
 
 import ast
+import io
 import pathlib
 import re
 import shutil
 import subprocess
 import sys
 import sysconfig
+import tokenize
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 LINE_LENGTH = 88
@@ -47,13 +55,22 @@ PER_FILE_IGNORES = {
 }
 
 _NOQA = re.compile(r"#\s*noqa", re.IGNORECASE)
+# A noqa *directive* (comment starting with the tag) that names no rule
+# code (PGH004): `# noqa`, `# noqa:` with nothing after it, or
+# `# noqa XXX` missing the colon. Checked against tokenized comments so
+# prose mentions of noqa in docstrings/comments don't count.
+_BARE_NOQA = re.compile(r"^#\s*noqa\b(?!\s*:\s*[A-Z][A-Z0-9]*\d)",
+                        re.IGNORECASE)
 
-# Public-API docstring coverage targets (ISSUE-8): the documented
-# serving surface. Directories are scanned recursively.
+# Public-API docstring coverage targets (ISSUE-8, ISSUE-10): the
+# documented serving surface plus the kernel/submap contract modules.
+# Directories are scanned recursively.
 DOCSTRING_TARGETS = (
     "src/repro/serve",
     "src/repro/core/engine.py",
     "src/repro/data/collate.py",
+    "src/repro/kernels/common.py",
+    "src/repro/data/submap.py",
 )
 
 
@@ -104,6 +121,21 @@ def _check_lines(path, text, problems):
         indent = stripped[:len(stripped) - len(stripped.lstrip())]
         if "\t" in indent:
             problems.append((path, i, "W191", "tab in indentation"))
+
+
+def _check_bare_noqa(path, text, problems):
+    """PGH004: a blanket ``# noqa`` suppresses every rule on the line and
+    documents none — require the code (``# noqa: E501``)."""
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(text).readline)
+        for tok in tokens:
+            if tok.type == tokenize.COMMENT \
+                    and _BARE_NOQA.match(tok.string):
+                problems.append((path, tok.start[0], "PGH004",
+                                 "blanket `# noqa` — name the rule code "
+                                 "(`# noqa: E501`)"))
+    except tokenize.TokenizeError:  # pragma: no cover - E999 reports it
+        pass
 
 
 def _dunder_all(tree) -> set:
@@ -226,6 +258,7 @@ def run_fallback() -> int:
             continue
         file_problems: list = []
         _check_lines(rel, text, file_problems)
+        _check_bare_noqa(rel, text, file_problems)
         _check_unused_imports(rel, text, tree, file_problems)
         _check_import_order(rel, text, tree, file_problems)
         problems.extend(p for p in file_problems
